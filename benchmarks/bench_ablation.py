@@ -1,0 +1,37 @@
+"""Paper §3.5.1 ablation: number of spilled assignments (1 vs 2 vs 3).
+
+The paper forgoes >2 assignments: "the first spilled assignment is
+generally sufficient ... the additional memory and indexing cost increases
+linearly". This ablation reproduces the claim: points-to-recall improves
+strongly none→soar(1 spill) and only marginally with further spills, while
+index size grows linearly.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import C, K, LAM, Timer, dataset, emit, neighbors
+from repro.core import build_ivf, kmr_curve, points_to_recall
+
+
+def main():
+    ds, tn = dataset(), neighbors()
+    prev = None
+    for n_spills in (0, 1, 2, 3):
+        with Timer() as t:
+            mode = "none" if n_spills == 0 else "soar"
+            idx = build_ivf(jax.random.PRNGKey(1), ds.X, C, spill_mode=mode,
+                            lam=LAM, n_spills=max(n_spills, 1), train_iters=8)
+            cv = kmr_curve(idx, ds.Q, tn, k=K)
+        pts = {r: points_to_recall(cv, r) for r in (0.85, 0.95)}
+        marg = ""
+        if prev is not None:
+            marg = (f" marginal_gain@95={prev / pts[0.95]:.3f}x")
+        prev = pts[0.95]
+        emit(f"ablation_spills{n_spills}", t.us,
+             f"pts@85={pts[0.85]:.0f} pts@95={pts[0.95]:.0f} "
+             f"assignments={idx.n_assignments}{marg}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 2 / Figure 6: datapoints read to reach recall targets,
+for No-Spilling / Spilling-no-SOAR / SOAR."""
+from __future__ import annotations
+
+from benchmarks.common import K, Timer, dataset, emit, index, neighbors
+from repro.core import kmr_curve, points_to_recall
+
+
+def main():
+    ds, tn = dataset(), neighbors()
+    curves = {}
+    for mode in ("none", "naive", "soar"):
+        with Timer() as t:
+            idx = index(mode)
+            curves[mode] = kmr_curve(idx, ds.Q, tn, k=K, name=mode)
+        emit(f"kmr_build_{mode}", t.us, f"n_assign={idx.n_assignments}")
+    for target in (0.80, 0.85, 0.90, 0.95):
+        pts = {m: points_to_recall(c, target) for m, c in curves.items()}
+        gain = pts["none"] / pts["soar"]
+        emit(f"kmr_points_r{int(target*100)}_none", 0.0, f"{pts['none']:.0f}")
+        emit(f"kmr_points_r{int(target*100)}_naive", 0.0, f"{pts['naive']:.0f}")
+        emit(f"kmr_points_r{int(target*100)}_soar", 0.0, f"{pts['soar']:.0f}")
+        emit(f"kmr_gain_r{int(target*100)}", 0.0, f"{gain:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Figure 9: lambda sweep — VQ distortion E||r'||^2 rises with lambda
+while the quantized-score-error correlation rho falls."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, dataset, emit, index, neighbors
+from repro.core.analysis import pair_stats, score_error_correlation
+
+
+def main():
+    ds, tn = dataset(), neighbors()
+    for lam in (0.0, 0.5, 1.0, 1.5, 2.0, 4.0):
+        with Timer() as t:
+            idx = index("soar", lam=lam)
+            st = pair_stats(ds.X, idx.centroids, idx.assignments, ds.Q, tn)
+            r2 = float(jnp.mean(jnp.asarray(st.r2norm) ** 2))
+            rho = score_error_correlation(st)
+        emit(f"fig9_lam{lam}_distortion", t.us, f"{r2:.4f}")
+        emit(f"fig9_lam{lam}_rho", 0.0, f"{rho:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Figures 11/12: recall–throughput tradeoff (CPU proxy).
+
+Hardware caveat (DESIGN.md §3): the paper's QPS numbers come from AVX2 LUT16
+kernels on Xeon; this container measures the host-orchestrated numpy engine
+on 1 core, so ABSOLUTE throughput is not comparable — the figures here
+establish (a) the recall/points-read tradeoff shape and (b) SOAR vs
+no-spill at matched recall, which are hardware-independent. The TPU-target
+kernels are exercised via tests (interpret mode) and the dry-run.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import K, Timer, dataset, emit, index, neighbors
+from repro.core import search_numpy
+
+
+def recall_at(ids, tn, k=10):
+    return float((ids[:, :k, None] == tn[:, None, :k]).any(-1).mean())
+
+
+def main():
+    ds, tn = dataset(), neighbors()
+    for mode in ("none", "soar"):
+        idx = index(mode, pq=25)
+        for top_t in (2, 5, 10, 20, 40):
+            t0 = time.perf_counter()
+            ids, stats = search_numpy(idx, ds.Q, top_t=top_t, final_k=10,
+                                      rerank_budget=300)
+            dt = time.perf_counter() - t0
+            qps = len(ds.Q) / dt
+            r = recall_at(ids, tn, k=10)
+            emit(f"qps_{mode}_t{top_t}", dt / len(ds.Q) * 1e6,
+                 f"recall@10={r:.3f} qps={qps:.0f} "
+                 f"pts={stats.points_read.mean():.0f}")
+
+
+if __name__ == "__main__":
+    main()

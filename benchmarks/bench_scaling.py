@@ -1,0 +1,31 @@
+"""Paper Figure 10: SOAR's read-ratio benefit vs dataset size and recall
+target (400 datapoints/partition maintained across sizes, as in the paper)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import D, K, NQ, Timer, emit
+from repro.core import build_ivf, kmr_curve, points_to_recall, true_neighbors
+from repro.data.vectors import glove_like
+
+
+def main():
+    for n in (25_000, 50_000, 100_000, 200_000):
+        c = max(n // 400, 32)
+        ds = glove_like(n=n, d=D, nq=NQ)
+        tn = true_neighbors(ds.X, ds.Q, k=K)
+        with Timer() as t:
+            curves = {}
+            for mode in ("none", "soar"):
+                idx = build_ivf(jax.random.PRNGKey(1), ds.X, c,
+                                spill_mode=mode, train_iters=8)
+                curves[mode] = kmr_curve(idx, ds.Q, tn, k=K, name=mode)
+        for target in (0.85, 0.95):
+            ratio = (points_to_recall(curves["none"], target)
+                     / points_to_recall(curves["soar"], target))
+            emit(f"fig10_n{n//1000}k_r{int(target*100)}", t.us,
+                 f"{ratio:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Render the §Roofline table from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(mesh: str):
+    rows = []
+    for p in sorted(glob.glob(f"artifacts/dryrun/*_{mesh}.json")):
+        r = json.load(open(p))
+        if "skipped" in r:
+            rows.append(r)
+            continue
+        rows.append(r)
+    return rows
+
+
+def render(mesh: str = "single") -> str:
+    rows = load(mesh)
+    out = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "peak GiB | useful FLOPs ratio | roofline fraction |")
+    out.append(hdr)
+    out.append("|" + "---|" * 9)
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP: {r['skipped']} | — | — | — |")
+            continue
+        rf = r["roofline"]
+        frac = rf["compute_s"] / max(rf["bound_step_s"], 1e-12)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3g} | "
+            f"{rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+            f"{rf['dominant'].replace('_s','')} | "
+            f"{r['memory']['peak_bytes']/2**30:.2f} | "
+            f"{rf['useful_flops_ratio']:.2f} | {frac:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    print(render(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only kmr,qps]
+
+Prints ``name,us_per_call,derived`` CSV rows (see each bench module's
+docstring for the paper table/figure it reproduces).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ("kmr", "correlation", "lambda", "scaling", "qps", "memory",
+           "ablation")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else BENCHES
+
+    print("name,us_per_call,derived")
+    for name in BENCHES:
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            __import__(f"benchmarks.bench_{name}", fromlist=["main"]).main()
+            print(f"# bench_{name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the harness going
+            print(f"bench_{name}_FAILED,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Statistics behind the paper's analysis figures (Figs 1, 2, 4, 7, 9).
+
+All functions operate on (query, true-neighbor) pairs: for each query q and
+each of its true top-k neighbors x, the residual r = x - C_pi(x) and the
+spilled residual r' = x - C_pi'(x).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PairStats(NamedTuple):
+    qr: np.ndarray          # <q, r>        per (query, neighbor) pair
+    qr2: np.ndarray         # <q, r'>
+    cos1: np.ndarray        # cos(theta)  = <q,r>/(||q|| ||r||)
+    cos2: np.ndarray        # cos(theta')
+    rnorm: np.ndarray       # ||r||
+    r2norm: np.ndarray      # ||r'||
+    res_cos: np.ndarray     # <r_hat, r'_hat>  (residual-residual angle)
+
+
+@jax.jit
+def _pair_stats(X, C, a1, a2, Q, true_ids):
+    nbr = X[true_ids]                        # (nq, k, d)
+    r = nbr - C[a1[true_ids]]
+    r2 = nbr - C[a2[true_ids]]
+    qn = jnp.linalg.norm(Q, axis=-1, keepdims=True)
+    qr = jnp.einsum("qd,qkd->qk", Q, r)
+    qr2 = jnp.einsum("qd,qkd->qk", Q, r2)
+    rn = jnp.maximum(jnp.linalg.norm(r, axis=-1), 1e-12)
+    r2n = jnp.maximum(jnp.linalg.norm(r2, axis=-1), 1e-12)
+    cos1 = qr / (rn * qn)
+    cos2 = qr2 / (r2n * qn)
+    rescos = jnp.einsum("qkd,qkd->qk", r, r2) / (rn * r2n)
+    return qr, qr2, cos1, cos2, rn, r2n, rescos
+
+
+def pair_stats(X, C, assignments, Q, true_ids) -> PairStats:
+    """assignments: (n, 2) [primary, spilled]."""
+    out = _pair_stats(jnp.asarray(X), jnp.asarray(C),
+                      jnp.asarray(assignments[:, 0]), jnp.asarray(assignments[:, 1]),
+                      jnp.asarray(Q, jnp.float32), jnp.asarray(true_ids))
+    return PairStats(*[np.asarray(o).reshape(-1) for o in out])
+
+
+def pearson(a: np.ndarray, b: np.ndarray) -> float:
+    a = a - a.mean()
+    b = b - b.mean()
+    denom = np.sqrt((a * a).sum() * (b * b).sum())
+    return float((a * b).sum() / max(denom, 1e-12))
+
+
+def score_error_correlation(stats: PairStats) -> float:
+    """rho(<q,r>, <q,r'>) over observed pairs (Figure 9 y-axis)."""
+    return pearson(stats.qr, stats.qr2)
+
+
+def angle_correlation(stats: PairStats) -> float:
+    """rho(cos theta, cos theta') (Figures 4 / 7)."""
+    return pearson(stats.cos1, stats.cos2)
+
+
+def mean_qr_by_rank(X, C, assignments, Q, true_ids, n_bins: int = 20):
+    """Figure 1: mean <q,r> bucketed by RANK(q, C_pi(x), C)."""
+    from repro.core.kmr import rank_statistics
+
+    class _Idx:  # minimal duck-typed shim for rank_statistics
+        pass
+    idx = _Idx()
+    idx.centroids = np.asarray(C)
+    idx.assignments = np.asarray(assignments)
+    prim_rank, _ = rank_statistics(idx, Q, true_ids)
+    stats = pair_stats(X, C, assignments, Q, true_ids)
+    ranks = prim_rank.reshape(-1)
+    qr = stats.qr
+    # log-spaced rank bins
+    edges = np.unique(np.geomspace(1, max(ranks.max(), 2), n_bins).astype(int))
+    centers, means = [], []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        m = (ranks >= lo - 1) & (ranks < hi)
+        if m.sum() > 0:
+            centers.append((lo + hi) / 2)
+            means.append(float(qr[m].mean()))
+    return np.array(centers), np.array(means)

@@ -1,0 +1,277 @@
+"""Distributed SOAR serving: database sharded over the mesh, queries
+replicated, local IVF search per shard, global top-k merge.
+
+This is the cluster-scale layer of the reproduction (big-ann-benchmarks
+scale: 1B+ vectors don't fit one host). Design (DESIGN.md §3.5):
+
+- each shard owns n/D vectors and trains its OWN local VQ codebook +
+  (optionally spilled) IVF over them — building is embarrassingly parallel
+  and shard-local, exactly how ScaNN serving shards;
+- a query batch is replicated to all shards (its bytes are tiny vs the DB);
+- each shard runs the fixed-budget jit search (search_jit semantics) over
+  its local partitions and emits its local top-k with GLOBAL ids;
+- one `all_gather` of (D × nq × k) ids/scores + a replicated top-k merge.
+  The collective moves O(nq·k·D) bytes — independent of database size, so
+  SOAR's bandwidth frugality survives cluster scale.
+
+Implemented with shard_map over the database axes; runs identically on the
+8-device test mesh (tests/test_distributed.py) and the 512-chip production
+mesh (dry-run cell `ann_serve`, launch/ann_dryrun.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.ivf import build_ivf
+from repro.core.search import pack_ivf
+from repro.quant.pq import PQCodebook
+
+
+class ShardedIVF(NamedTuple):
+    """Per-shard IVF arrays, stacked over a leading shard dim D."""
+    centroids: jax.Array     # (D, c, d)
+    part_ids: jax.Array      # (D, c, pmax) int32 GLOBAL point ids, -1 pad
+    sizes: jax.Array         # (D, c) int32
+    rerank: jax.Array        # (D, n_local, d) — highest-bitrate local shard
+    local_base: jax.Array    # (D,) int32 global id offset of each shard
+
+
+class ShardedIVFPQ(NamedTuple):
+    """PQ-scored variant (§Perf H3 — the paper's actual pipeline): per
+    ASSIGNMENT codes in partition order; candidates are scored from uint8
+    codes (d/(2s)·2 bytes each at uint8 layout) instead of gathering the
+    float32 vectors (4d bytes) — 16× less candidate traffic at m=d/4."""
+    centroids: jax.Array     # (D, c, d)
+    part_ids: jax.Array      # (D, c, pmax) int32 GLOBAL ids, -1 pad
+    part_codes: jax.Array    # (D, c, pmax, m) uint8 PQ codes per assignment
+    pq_centers: jax.Array    # (D, m, 16, s) per-shard PQ codebook
+    sizes: jax.Array         # (D, c) int32
+    rerank: jax.Array        # (D, n_local, d)
+    local_base: jax.Array    # (D,) int32
+
+
+def build_sharded_ivf(key, X: np.ndarray, n_shards: int, n_partitions: int,
+                      spill_mode: str = "soar", lam: float = 1.0,
+                      train_iters: int = 8) -> ShardedIVF:
+    """Host-side build: split X row-wise, build one spilled IVF per shard."""
+    n = X.shape[0]
+    assert n % n_shards == 0
+    nl = n // n_shards
+    cents, ids, sizes, reranks, bases = [], [], [], [], []
+    pmax = 0
+    packed = []
+    for s in range(n_shards):
+        Xs = X[s * nl:(s + 1) * nl]
+        idx = build_ivf(jax.random.fold_in(key, s), Xs, n_partitions,
+                        spill_mode=spill_mode, lam=lam,
+                        train_iters=train_iters)
+        pk = pack_ivf(idx)
+        packed.append(pk)
+        pmax = max(pmax, pk.part_ids.shape[1])
+    for s, pk in enumerate(packed):
+        pad = pmax - pk.part_ids.shape[1]
+        ids.append(np.pad(np.asarray(pk.part_ids), ((0, 0), (0, pad)),
+                          constant_values=-1))
+        cents.append(np.asarray(pk.centroids))
+        sizes.append(np.asarray(pk.sizes))
+        reranks.append(np.asarray(pk.rerank))
+        bases.append(s * nl)
+    return ShardedIVF(
+        jnp.asarray(np.stack(cents)), jnp.asarray(np.stack(ids)),
+        jnp.asarray(np.stack(sizes)), jnp.asarray(np.stack(reranks)),
+        jnp.asarray(np.array(bases, np.int32)))
+
+
+def abstract_sharded_ivf(n_shards: int, n_local: int, n_partitions: int,
+                         pmax: int, d: int) -> ShardedIVF:
+    """ShapeDtypeStruct stand-in for the production-scale dry run."""
+    f = jax.ShapeDtypeStruct
+    return ShardedIVF(
+        f((n_shards, n_partitions, d), jnp.float32),
+        f((n_shards, n_partitions, pmax), jnp.int32),
+        f((n_shards, n_partitions), jnp.int32),
+        f((n_shards, n_local, d), jnp.float32),
+        f((n_shards,), jnp.int32))
+
+
+def abstract_sharded_ivf_pq(n_shards: int, n_local: int, n_partitions: int,
+                            pmax: int, d: int, m: int) -> ShardedIVFPQ:
+    f = jax.ShapeDtypeStruct
+    return ShardedIVFPQ(
+        f((n_shards, n_partitions, d), jnp.float32),
+        f((n_shards, n_partitions, pmax), jnp.int32),
+        f((n_shards, n_partitions, pmax, m), jnp.uint8),
+        f((n_shards, m, 16, d // m), jnp.float32),
+        f((n_shards, n_partitions), jnp.int32),
+        f((n_shards, n_local, d), jnp.float32),
+        f((n_shards,), jnp.int32))
+
+
+def sharded_ivf_pspecs(axes: Tuple[str, ...]) -> ShardedIVF:
+    a = axes if len(axes) > 1 else axes[0]
+    return ShardedIVF(P(a), P(a), P(a), P(a), P(a))
+
+
+def sharded_ivf_pq_pspecs(axes: Tuple[str, ...]) -> ShardedIVFPQ:
+    a = axes if len(axes) > 1 else axes[0]
+    return ShardedIVFPQ(P(a), P(a), P(a), P(a), P(a), P(a), P(a))
+
+
+def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
+                            final_k: int):
+    """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global."""
+    from jax.experimental.shard_map import shard_map
+
+    def local_search(ivf: ShardedIVF, Q):
+        # leading shard dim is size 1 inside shard_map — squeeze it
+        C = ivf.centroids[0]
+        part_ids = ivf.part_ids[0]
+        rerank = ivf.rerank[0]
+        base = ivf.local_base[0]
+
+        def one(q):
+            sc = C @ q                                     # (c,)
+            _, parts = jax.lax.top_k(sc, top_t)
+            ids = part_ids[parts].reshape(-1)              # local ids
+            valid = ids >= 0
+            scores = rerank[jnp.maximum(ids, 0)] @ q
+            scores = jnp.where(valid, scores, -jnp.inf)
+            # dedup via scatter-max over the local shard
+            dense = jnp.full((rerank.shape[0],), -jnp.inf, scores.dtype)
+            dense = dense.at[jnp.maximum(ids, 0)].max(scores)
+            v, i = jax.lax.top_k(dense, final_k)
+            return (i + base).astype(jnp.int32), v
+
+        ids, vals = jax.vmap(one)(Q)                       # (nq, k) local best
+        # global merge: gather every shard's candidates, re-top-k
+        ax = axes[0] if len(axes) == 1 else axes
+        all_ids = jax.lax.all_gather(ids, ax, tiled=False)   # (D, nq, k)
+        all_vals = jax.lax.all_gather(vals, ax, tiled=False)
+        if len(axes) > 1:   # gathered over multiple axes → extra lead dims
+            all_ids = all_ids.reshape((-1,) + ids.shape)
+            all_vals = all_vals.reshape((-1,) + vals.shape)
+        D = all_ids.shape[0]
+        flat_v = jnp.moveaxis(all_vals, 0, 1).reshape(Q.shape[0], D * final_k)
+        flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(Q.shape[0], D * final_k)
+        v, pos = jax.lax.top_k(flat_v, final_k)
+        return jnp.take_along_axis(flat_i, pos, axis=1), v
+
+    spec = sharded_ivf_pspecs(axes)
+    return shard_map(local_search, mesh=mesh,
+                     in_specs=(spec, P()), out_specs=(P(), P()),
+                     check_rep=False)
+
+
+def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
+                               final_k: int, rerank_k: int = 256,
+                               q_chunk: int = 128):
+    """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
+
+    Per shard per query: centroid top-t → score the t·pmax candidates from
+    their uint8 PQ codes via a VMEM-resident LUT (+ the centroid score as
+    the coarse term) → top rerank_k by approximate score → exact rerank of
+    only those from the float data → local top-k → global all_gather merge.
+    Queries are processed in q_chunk blocks (lax.map) to bound the live
+    candidate buffers (baseline peaked at 16 GiB gathering f32 candidates).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def local_search(ivf: ShardedIVFPQ, Q):
+        C = ivf.centroids[0]
+        part_ids = ivf.part_ids[0]
+        part_codes = ivf.part_codes[0]
+        pqc = ivf.pq_centers[0]                   # (m, 16, s)
+        rerank = ivf.rerank[0]
+        base = ivf.local_base[0]
+        m = pqc.shape[0]
+        s = pqc.shape[2]
+
+        def one(q):
+            sc = C @ q                                         # (c,)
+            psc, parts = jax.lax.top_k(sc, top_t)
+            ids = part_ids[parts].reshape(-1)                  # (t*pmax,)
+            valid = ids >= 0
+            codes = part_codes[parts].reshape(ids.shape[0], m)
+            lut = jnp.einsum("ms,mks->mk", q.reshape(m, s), pqc)  # (m,16)
+            approx = jnp.sum(
+                jnp.take_along_axis(lut[None], codes[:, :, None].astype(jnp.int32),
+                                    axis=2)[:, :, 0], axis=-1)
+            approx = approx + jnp.repeat(psc, part_ids.shape[1])
+            approx = jnp.where(valid, approx, -jnp.inf)
+            av, apos = jax.lax.top_k(approx, rerank_k)
+            cand = ids[apos]
+            # dedup within the rerank set (spilled dupes): keep first by id
+            order = jnp.argsort(cand)
+            sorted_ids = cand[order]
+            dup = jnp.concatenate(
+                [jnp.array([False]), sorted_ids[1:] == sorted_ids[:-1]])
+            exact = rerank[jnp.maximum(sorted_ids, 0)] @ q
+            exact = jnp.where(dup | (sorted_ids < 0)
+                              | ~jnp.isfinite(av[order]), -jnp.inf, exact)
+            v, pos = jax.lax.top_k(exact, final_k)
+            return (sorted_ids[pos] + base).astype(jnp.int32), v
+
+        nq = Q.shape[0]
+        Qc = Q.reshape(nq // q_chunk, q_chunk, -1)
+        ids, vals = jax.lax.map(lambda qb: jax.vmap(one)(qb), Qc)
+        ids = ids.reshape(nq, final_k)
+        vals = vals.reshape(nq, final_k)
+        ax = axes[0] if len(axes) == 1 else axes
+        all_ids = jax.lax.all_gather(ids, ax, tiled=False)
+        all_vals = jax.lax.all_gather(vals, ax, tiled=False)
+        if len(axes) > 1:
+            all_ids = all_ids.reshape((-1,) + ids.shape)
+            all_vals = all_vals.reshape((-1,) + vals.shape)
+        D = all_ids.shape[0]
+        flat_v = jnp.moveaxis(all_vals, 0, 1).reshape(nq, D * final_k)
+        flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(nq, D * final_k)
+        v, pos = jax.lax.top_k(flat_v, final_k)
+        return jnp.take_along_axis(flat_i, pos, axis=1), v
+
+    spec = sharded_ivf_pq_pspecs(axes)
+    return shard_map(local_search, mesh=mesh,
+                     in_specs=(spec, P()), out_specs=(P(), P()),
+                     check_rep=False)
+
+
+def build_sharded_ivf_pq(key, X: np.ndarray, n_shards: int, n_partitions: int,
+                         pq_subspaces: int, spill_mode: str = "soar",
+                         lam: float = 1.0, train_iters: int = 8
+                         ) -> ShardedIVFPQ:
+    """Host-side build of the PQ-scored sharded index."""
+    n = X.shape[0]
+    assert n % n_shards == 0
+    nl = n // n_shards
+    packed = []
+    pmax = 0
+    for sh in range(n_shards):
+        Xs = X[sh * nl:(sh + 1) * nl]
+        idx = build_ivf(jax.random.fold_in(key, sh), Xs, n_partitions,
+                        spill_mode=spill_mode, lam=lam,
+                        pq_subspaces=pq_subspaces, train_iters=train_iters)
+        pk = pack_ivf(idx)
+        packed.append((pk, idx))
+        pmax = max(pmax, pk.part_ids.shape[1])
+    cents, ids, codes, pqcs, sizes, reranks, bases = [], [], [], [], [], [], []
+    for sh, (pk, idx) in enumerate(packed):
+        pad = pmax - pk.part_ids.shape[1]
+        ids.append(np.pad(np.asarray(pk.part_ids), ((0, 0), (0, pad)),
+                          constant_values=-1))
+        codes.append(np.pad(np.asarray(pk.part_codes),
+                            ((0, 0), (0, pad), (0, 0))))
+        cents.append(np.asarray(pk.centroids))
+        pqcs.append(np.asarray(idx.pq.centers))
+        sizes.append(np.asarray(pk.sizes))
+        reranks.append(np.asarray(pk.rerank))
+        bases.append(sh * nl)
+    return ShardedIVFPQ(
+        jnp.asarray(np.stack(cents)), jnp.asarray(np.stack(ids)),
+        jnp.asarray(np.stack(codes)), jnp.asarray(np.stack(pqcs)),
+        jnp.asarray(np.stack(sizes)), jnp.asarray(np.stack(reranks)),
+        jnp.asarray(np.array(bases, np.int32)))

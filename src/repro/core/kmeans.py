@@ -1,0 +1,109 @@
+"""Vector-quantization training: k-means++ init + Lloyd's iterations.
+
+All heavy math is jit-compiled and chunked so memory stays bounded at
+n·chunk rather than n·c. Supports spherical mode (centroids renormalized,
+for angular/MIPS data) and anisotropic (score-aware) assignment/update via
+repro.quant.anisotropic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import chunked_map, pairwise_neg_sqdist_argmin
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array      # (c, d)
+    assignments: jax.Array    # (n,) int32 primary assignment
+    distortion: jax.Array     # scalar mean ||x - c||^2
+    history: np.ndarray       # per-iteration distortion
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def kmeans_pp_init(key, X, c: int):
+    """k-means++ seeding, fully compiled (fori_loop over c picks)."""
+    n, d = X.shape
+    k0, kloop = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    init_c = jnp.zeros((c, d), X.dtype).at[0].set(X[first])
+    init_d = jnp.sum((X - X[first]) ** 2, axis=-1)
+
+    def body(i, state):
+        cents, min_d, key = state
+        key, kp = jax.random.split(key)
+        # sample next center proportional to squared distance
+        idx = jax.random.categorical(kp, jnp.log(jnp.maximum(min_d, 1e-30)))
+        nxt = X[idx]
+        cents = cents.at[i].set(nxt)
+        min_d = jnp.minimum(min_d, jnp.sum((X - nxt) ** 2, axis=-1))
+        return cents, min_d, key
+
+    cents, _, _ = jax.lax.fori_loop(1, c, body, (init_c, init_d, kloop))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("c", "chunk"))
+def lloyd_step(X, C, c: int, chunk: int = 16384):
+    """One Lloyd iteration: assign + mean update. Empty clusters keep old center."""
+    assign, min_d = pairwise_neg_sqdist_argmin(X, C, chunk=chunk)
+    sums = jax.ops.segment_sum(X, assign, num_segments=c)
+    counts = jax.ops.segment_sum(jnp.ones((X.shape[0],), X.dtype), assign, num_segments=c)
+    new_C = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), C)
+    return new_C, assign, jnp.mean(min_d)
+
+
+def train_kmeans(key, X, c: int, iters: int = 15, chunk: int = 16384,
+                 spherical: bool = False, init_sample: int = 50_000,
+                 tol: float = 1e-5, verbose: bool = False) -> KMeansResult:
+    """Full VQ training. Host loop over jit'd steps (allows early stop/logging)."""
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    kinit, _ = jax.random.split(key)
+    if n > init_sample:
+        sel = jax.random.choice(kinit, n, (init_sample,), replace=False)
+        C = kmeans_pp_init(kinit, X[sel], c)
+    else:
+        C = kmeans_pp_init(kinit, X, c)
+    hist = []
+    prev = np.inf
+    assign = None
+    dist = jnp.array(np.inf)
+    for it in range(iters):
+        C, assign, dist = lloyd_step(X, C, c, chunk=chunk)
+        if spherical:
+            C = C / jnp.maximum(jnp.linalg.norm(C, axis=-1, keepdims=True), 1e-12)
+        d = float(dist)
+        hist.append(d)
+        if verbose:
+            print(f"kmeans iter {it}: distortion {d:.6f}")
+        if prev - d < tol * max(abs(prev), 1e-12):
+            break
+        prev = d
+    # final re-assignment against the final centroids
+    assign, min_d = pairwise_neg_sqdist_argmin(X, C, chunk=chunk)
+    return KMeansResult(C, assign, jnp.mean(min_d), np.asarray(hist))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def assign_euclidean(X, C, chunk: int = 16384):
+    """Primary VQ assignment: nearest centroid by squared L2."""
+    assign, _ = pairwise_neg_sqdist_argmin(X, C, chunk=chunk)
+    return assign
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def assign_euclidean_topk(X, C, k: int, chunk: int = 16384):
+    """Top-k nearest centroids per point (for naive spilling baselines)."""
+    Cn = jnp.sum(C * C, axis=-1)
+
+    def f(xb):
+        d = Cn[None, :] - 2.0 * (xb @ C.T)
+        _, idx = jax.lax.top_k(-d, k)
+        return idx.astype(jnp.int32)
+
+    return chunked_map(f, X, chunk)

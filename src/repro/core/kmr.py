@@ -1,0 +1,97 @@
+"""K-means recall (KMR) curves — Eq. (1) of the paper, partition-size weighted.
+
+KMR_k(t) = mean fraction of true top-k neighbors whose (best) assigned
+partition ranks within the query's top-t partitions. Following §5.1, curves
+are reported against the cumulative NUMBER OF DATAPOINTS in the top-t
+partitions (spilled indices have larger partitions, so equal-t comparisons
+would flatter spilling).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import IVFIndex
+from repro.utils import topk_inner_product
+
+
+class KMRCurve(NamedTuple):
+    recall_at_t: np.ndarray        # (c,) mean recall when searching top-t parts
+    points_at_t: np.ndarray        # (c,) mean cumulative datapoints read
+    name: str
+
+
+def true_neighbors(X, Q, k: int = 100, chunk: int = 8192) -> np.ndarray:
+    _, ids = topk_inner_product(jnp.asarray(Q), jnp.asarray(X), k, chunk=chunk)
+    return np.asarray(ids)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _kmr_core(C, sizes, assigns, Q, true_ids, k: int):
+    """assigns: (n, a) int32; true_ids: (nq, k).
+
+    Returns (recall_hist (nq, c), cum_points (nq, c)) where recall_hist[q, t-1]
+    is the count of neighbors found within top-t, cum_points the datapoints read.
+    """
+    c = C.shape[0]
+    scores = Q @ C.T                                    # (nq, c)
+    order = jnp.argsort(-scores, axis=1)                # rank → partition
+    # rankpos[q, part] = rank of partition for this query
+    rankpos = jnp.zeros_like(order).at[
+        jnp.arange(Q.shape[0])[:, None], order].set(
+        jnp.broadcast_to(jnp.arange(c), order.shape))
+    cum_points = jnp.cumsum(sizes[order], axis=1)       # (nq, c)
+    nbr_assign = assigns[true_ids]                      # (nq, k, a)
+    rp = jnp.take_along_axis(
+        rankpos[:, None, :], nbr_assign.astype(jnp.int32), axis=2)  # (nq,k,a)
+    best = jnp.min(rp, axis=2)                          # (nq, k) best rank (0-based)
+    # histogram over ranks → cumulative = neighbors found within top-t
+    onehot = jax.nn.one_hot(best, c, dtype=jnp.float32).sum(axis=1)  # (nq, c)
+    found = jnp.cumsum(onehot, axis=1)
+    return found / k, cum_points
+
+
+def kmr_curve(index: IVFIndex, Q, true_ids, k: int = 100, name: str = "") -> KMRCurve:
+    sizes = jnp.asarray(index.partition_sizes().astype(np.float32))
+    recall, pts = _kmr_core(
+        jnp.asarray(index.centroids), sizes, jnp.asarray(index.assignments),
+        jnp.asarray(Q, jnp.float32), jnp.asarray(true_ids), k)
+    return KMRCurve(np.asarray(recall.mean(0)), np.asarray(pts.mean(0)),
+                    name or index.spill_mode)
+
+
+def points_to_recall(curve: KMRCurve, target: float) -> float:
+    """Mean datapoints that must be read to reach `target` mean recall
+    (linear interpolation between adjacent t; inf if unreachable)."""
+    r, p = curve.recall_at_t, curve.points_at_t
+    idx = np.searchsorted(r, target)
+    if idx >= len(r):
+        return float("inf")
+    if idx == 0 or r[idx] == target:
+        return float(p[idx])
+    r0, r1, p0, p1 = r[idx - 1], r[idx], p[idx - 1], p[idx]
+    if r1 <= r0:
+        return float(p[idx])
+    w = (target - r0) / (r1 - r0)
+    return float(p0 + w * (p1 - p0))
+
+
+def rank_statistics(index: IVFIndex, Q, true_ids):
+    """Per (query, neighbor): primary-centroid rank and spilled-centroid rank
+    (Figure 8 data). Requires a spilled index (a >= 2)."""
+    C = jnp.asarray(index.centroids)
+    Qj = jnp.asarray(Q, jnp.float32)
+    scores = Qj @ C.T
+    order = jnp.argsort(-scores, axis=1)
+    c = C.shape[0]
+    rankpos = jnp.zeros_like(order).at[
+        jnp.arange(Qj.shape[0])[:, None], order].set(
+        jnp.broadcast_to(jnp.arange(c), order.shape))
+    nbr_assign = jnp.asarray(index.assignments)[jnp.asarray(true_ids)]  # (nq,k,a)
+    rp = jnp.take_along_axis(rankpos[:, None, :],
+                             nbr_assign.astype(jnp.int32), axis=2)
+    return np.asarray(rp[..., 0]), np.asarray(rp[..., 1])  # primary, spilled

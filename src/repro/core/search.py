@@ -1,0 +1,170 @@
+"""ANN search over a (possibly spilled) IVF index.
+
+Two execution paths:
+
+- `search_numpy`: host-orchestrated ragged search (like ScaNN's CPU engine):
+  jit'd centroid scoring, numpy CSR gathers, vectorized PQ LUT scoring,
+  dedup (a point may appear in 2+ searched partitions under spilling),
+  exact rerank. Used by the recall/QPS benchmarks.
+
+- `search_jit`: fixed-budget, fully-jit pipeline (padded partitions) — the
+  TPU-target path the Pallas kernels and the distributed serving engine use.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import IVFIndex
+from repro.quant.pq import pq_lut, PQCodebook
+
+
+class SearchStats(NamedTuple):
+    points_read: np.ndarray     # (nq,) assignments scanned (incl. duplicates)
+    unique_candidates: np.ndarray
+
+
+def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
+                 final_k: int = 10, rerank_budget: int = 0):
+    """Returns (ids (nq, final_k), SearchStats). rerank_budget=0 → exact
+    scoring of all candidates (no PQ stage)."""
+    Q = np.asarray(Q, np.float32)
+    C = index.centroids
+    scores_c = Q @ C.T                                   # (nq, c)
+    top_parts = np.argpartition(-scores_c, top_t - 1, axis=1)[:, :top_t]
+    # order the selected partitions by score (needed for correct LUT offsets)
+    row = np.arange(Q.shape[0])[:, None]
+    ordsel = np.argsort(-scores_c[row, top_parts], axis=1)
+    top_parts = top_parts[row, ordsel]
+
+    starts, pids = index.starts, index.point_ids
+    use_pq = index.codes is not None and rerank_budget > 0
+    data = index.rerank_f32
+    if data is None:
+        from repro.quant.int8 import int8_dequantize
+        data = np.asarray(int8_dequantize(index.rerank_int8))
+
+    out = np.zeros((Q.shape[0], final_k), np.int32)
+    points_read = np.zeros(Q.shape[0], np.int64)
+    uniq = np.zeros(Q.shape[0], np.int64)
+    luts = None
+    if use_pq:
+        luts = np.asarray(jax.vmap(lambda q: pq_lut(index.pq, q))(jnp.asarray(Q)))
+
+    for qi in range(Q.shape[0]):
+        parts = top_parts[qi]
+        segs = [np.arange(starts[p], starts[p + 1]) for p in parts]
+        seg_part = np.concatenate(
+            [np.full(len(s), p, np.int32) for s, p in zip(segs, parts)])
+        cand_rows = np.concatenate(segs).astype(np.int64)
+        cand_ids = pids[cand_rows]
+        points_read[qi] = len(cand_ids)
+
+        if use_pq:
+            codes = index.codes[cand_rows]               # (cand, m)
+            lut = luts[qi]                                # (m, 16)
+            approx = lut[np.arange(lut.shape[0])[None, :], codes].sum(axis=1)
+            approx = approx + scores_c[qi, seg_part]      # + <q, centroid>
+            # dedup: keep best approx score per point id
+            order = np.argsort(-approx, kind="stable")
+            ids_sorted = cand_ids[order]
+            first = np.unique(ids_sorted, return_index=True)[1]
+            dedup_ids = ids_sorted[np.sort(first)][:rerank_budget]
+        else:
+            dedup_ids = np.unique(cand_ids)
+        uniq[qi] = len(dedup_ids)
+        exact = data[dedup_ids] @ Q[qi]
+        k = min(final_k, len(dedup_ids))
+        top = np.argpartition(-exact, k - 1)[:k] if len(dedup_ids) > k else np.arange(len(dedup_ids))
+        top = top[np.argsort(-exact[top])]
+        out[qi, :k] = dedup_ids[top]
+        if k < final_k:
+            out[qi, k:] = -1
+    return out, SearchStats(points_read, uniq)
+
+
+# --------------------------------------------------------------------------
+# Fixed-budget jit path (TPU target; used by distributed serving + kernels)
+# --------------------------------------------------------------------------
+
+class PackedIVF(NamedTuple):
+    """Dense, padded IVF layout for the jit path.
+
+    part_ids:   (c, pmax) int32 point ids, -1 padded
+    part_codes: (c, pmax, m) uint8 PQ codes (zeros where padded)
+    sizes:      (c,) int32
+    """
+    centroids: jax.Array
+    part_ids: jax.Array
+    part_codes: Optional[jax.Array]
+    sizes: jax.Array
+    pq: Optional[PQCodebook]
+    rerank: jax.Array           # (n, d) f32
+
+
+def pack_ivf(index: IVFIndex, pmax: Optional[int] = None) -> PackedIVF:
+    c = index.n_partitions
+    sizes = index.partition_sizes()
+    pmax = int(pmax or sizes.max())
+    m = index.codes.shape[1] if index.codes is not None else 0
+    ids = np.full((c, pmax), -1, np.int32)
+    codes = np.zeros((c, pmax, m), np.uint8) if m else None
+    for p in range(c):
+        s, e = index.starts[p], index.starts[p + 1]
+        ln = min(e - s, pmax)
+        ids[p, :ln] = index.point_ids[s:s + ln]
+        if m:
+            codes[p, :ln] = index.codes[s:s + ln]
+    data = index.rerank_f32
+    if data is None:
+        from repro.quant.int8 import int8_dequantize
+        data = np.asarray(int8_dequantize(index.rerank_int8))
+    return PackedIVF(
+        jnp.asarray(index.centroids), jnp.asarray(ids),
+        jnp.asarray(codes) if codes is not None else None,
+        jnp.asarray(np.minimum(sizes, pmax).astype(np.int32)),
+        index.pq, jnp.asarray(data))
+
+
+@functools.partial(jax.jit, static_argnames=("top_t", "final_k", "rerank_budget"))
+def search_jit(packed: PackedIVF, Q, top_t: int, final_k: int,
+               rerank_budget: int = 256):
+    """Fully-jit batched search. Returns (ids, scores) of shape (nq, final_k).
+
+    Pipeline per query: centroid MIPS top-t → gather padded partitions →
+    PQ LUT scoring (+ centroid offset) → dedup-by-max via scatter-max →
+    top rerank_budget → exact rerank → top final_k.
+    """
+    C, ids_all, codes_all = packed.centroids, packed.part_ids, packed.part_codes
+    n = packed.rerank.shape[0]
+
+    def one(q):
+        sc = C @ q                                         # (c,)
+        psc, parts = jax.lax.top_k(sc, top_t)
+        ids = ids_all[parts].reshape(-1)                   # (t*pmax,)
+        valid = ids >= 0
+        if codes_all is not None:
+            lut = pq_lut(packed.pq, q)                     # (m, 16)
+            codes = codes_all[parts].reshape(ids.shape[0], -1)
+            approx = jnp.sum(
+                jnp.take_along_axis(lut[None], codes[:, :, None].astype(jnp.int32),
+                                    axis=2)[:, :, 0], axis=-1)
+            approx = approx + jnp.repeat(psc, ids_all.shape[1])
+        else:
+            approx = jnp.repeat(psc, ids_all.shape[1])
+        approx = jnp.where(valid, approx, -jnp.inf)
+        # dedup: scatter-max into a dense per-point buffer
+        dense = jnp.full((n,), -jnp.inf, approx.dtype)
+        dense = dense.at[jnp.where(valid, ids, n - 1)].max(
+            jnp.where(valid, approx, -jnp.inf))
+        bv, bi = jax.lax.top_k(dense, rerank_budget)
+        exact = packed.rerank[bi] @ q
+        exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
+        fv, fpos = jax.lax.top_k(exact, final_k)
+        return bi[fpos].astype(jnp.int32), fv
+
+    return jax.vmap(one)(Q)

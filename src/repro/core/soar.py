@@ -1,0 +1,114 @@
+"""SOAR: Spilling with Orthogonality-Amplified Residuals (the paper's core).
+
+Theorem 3.1: for weight w(t)=|t|^lambda and hypersphere-uniform queries,
+
+    L(r', r) ∝ ||r'||^2 + lambda * ||proj_r r'||^2 ,   r' = x - c'.
+
+The spilled assignment is argmin_{c' != pi(x)} of that loss. We expand it
+into matmul-friendly form (everything reassociated so the inner loop is two
+GEMMs against the codebook — this is also the form the Pallas kernel uses):
+
+    ||x - c||^2            = ||c||^2 - 2<x,c> + const_i
+    <r_hat, x - c>^2       = (<r_hat,x> - <r_hat,c>)^2
+
+so  loss_ij = ||c_j||^2 - 2 X C^T + lambda (rx_i - R_hat C^T)^2  (+ const_i).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import chunked_map
+
+
+def _unit_residuals(X, C, primary, eps=1e-12):
+    r = X - C[primary]
+    rn = jnp.linalg.norm(r, axis=-1, keepdims=True)
+    return r, r / jnp.maximum(rn, eps)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def soar_assign(X, C, primary, lam: float = 1.0, chunk: int = 8192):
+    """Single spilled assignment per point under the SOAR loss.
+
+    Args:
+      X: (n, d) datapoints. C: (c, d) fixed VQ codebook.
+      primary: (n,) int32 primary assignments pi(x).
+      lam: the SOAR lambda (paper uses 1.0 at 1M scale, 1.5 at 1B scale).
+    Returns:
+      (n,) int32 spilled assignments pi'(x), guaranteed != primary.
+    """
+    _, rhat = _unit_residuals(X, C, primary)
+    Cn = jnp.sum(C * C, axis=-1)
+    packed = jnp.concatenate(
+        [X, rhat, primary[:, None].astype(X.dtype)], axis=-1)
+    d = X.shape[-1]
+
+    def f(blk):
+        xb, rb, pb = blk[:, :d], blk[:, d:2 * d], blk[:, -1].astype(jnp.int32)
+        xc = xb @ C.T                       # <x, c_j>
+        rc = rb @ C.T                       # <r_hat, c_j>
+        rx = jnp.sum(rb * xb, axis=-1)      # <r_hat, x>
+        loss = Cn[None, :] - 2.0 * xc + lam * (rx[:, None] - rc) ** 2
+        loss = jnp.where(
+            jax.nn.one_hot(pb, C.shape[0], dtype=bool), jnp.inf, loss)
+        return jnp.argmin(loss, axis=-1).astype(jnp.int32)
+
+    return chunked_map(f, packed, chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("n_spills", "chunk"))
+def soar_assign_multi(X, C, primary, lam: float = 1.0, n_spills: int = 1,
+                      chunk: int = 8192):
+    """Generalization to >1 spilled assignment (paper §3.5.1).
+
+    Each subsequent assignment penalizes parallelism with ALL prior residuals:
+        loss = ||r'||^2 + lam * sum_k <r_hat_k, r'>^2.
+    Returns (n, 1 + n_spills) assignments, column 0 = primary.
+    """
+    n = X.shape[0]
+    cn = C.shape[0]
+    Cn = jnp.sum(C * C, axis=-1)
+    assigns = [primary.astype(jnp.int32)]
+    rhats = []
+    for _ in range(n_spills):
+        _, rh = _unit_residuals(X, C, assigns[-1])
+        rhats.append(rh)
+        A = jnp.stack(assigns, axis=1)              # (n, a)
+        R = jnp.stack(rhats, axis=1)                # (n, a, d)
+        d = X.shape[-1]
+        a = R.shape[1]
+        packed = jnp.concatenate(
+            [X, R.reshape(n, a * d), A.astype(X.dtype)], axis=-1)
+
+        def f(blk, a=a, d=d):
+            xb = blk[:, :d]
+            rb = blk[:, d:d + a * d].reshape(-1, a, d)
+            pb = blk[:, d + a * d:].astype(jnp.int32)           # (chunk, a)
+            xc = xb @ C.T
+            rc = jnp.einsum("bad,cd->bac", rb, C)               # <rhat_k, c_j>
+            rx = jnp.sum(rb * xb[:, None, :], axis=-1)          # <rhat_k, x>
+            pen = jnp.sum((rx[:, :, None] - rc) ** 2, axis=1)   # sum over k
+            loss = Cn[None, :] - 2.0 * xc + lam * pen
+            used = jnp.any(
+                jax.nn.one_hot(pb, cn, dtype=bool), axis=1)     # mask all prior
+            loss = jnp.where(used, jnp.inf, loss)
+            return jnp.argmin(loss, axis=-1).astype(jnp.int32)
+
+        assigns.append(chunked_map(f, packed, chunk))
+    return jnp.stack(assigns, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def naive_spill_assign(X, C, primary, chunk: int = 8192):
+    """Baseline: spill to the second-closest centroid (no SOAR loss)."""
+    return soar_assign(X, C, primary, lam=0.0, chunk=chunk)
+
+
+def soar_loss_values(X, C, primary, candidate, lam: float = 1.0):
+    """Loss value of a candidate spilled assignment (for tests/analysis)."""
+    r, rhat = _unit_residuals(X, C, primary)
+    rp = X - C[candidate]
+    return jnp.sum(rp * rp, axis=-1) + lam * jnp.sum(rhat * rp, axis=-1) ** 2

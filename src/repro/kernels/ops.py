@@ -1,0 +1,33 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel body
+runs as traced jnp ops, validating block logic exactly. On a real TPU
+backend, `interpret=False` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pq_score import pq_score_pallas
+from repro.kernels.vq_assign import vq_assign_pallas
+from repro.kernels.soar_assign import soar_assign_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pq_score(luts, codes, **kw):
+    """Batched PQ LUT scoring: (nq, m, 16) × (n, m) → (nq, n)."""
+    return pq_score_pallas(luts, codes, interpret=_interpret(), **kw)
+
+
+def vq_assign(X, C, **kw):
+    """Fused nearest-centroid: (n, d) × (c, d) → (idx (n,), sqdist (n,))."""
+    return vq_assign_pallas(X, C, interpret=_interpret(), **kw)
+
+
+def soar_assign(X, rhat, primary, C, lam: float = 1.0, **kw):
+    """Fused SOAR spilled assignment → (idx (n,), loss (n,))."""
+    return soar_assign_pallas(X, rhat, primary, C, lam=lam,
+                              interpret=_interpret(), **kw)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: batched PQ LUT scoring as a one-hot MXU contraction.
+
+TPU adaptation of ScaNN's AVX2 LUT16 (DESIGN.md §3): instead of in-register
+shuffles, codes are expanded to one-hot IN VMEM and contracted against the
+per-query LUTs on the MXU. The LUT block stays VMEM-resident across the whole
+point dimension; HBM traffic is one streaming read of the (packed) codes.
+
+score[q, i] = sum_m luts[q, m, codes[i, m]]
+            = luts[q].reshape(m*16) · onehot(codes[i]).reshape(m*16)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Block sizes: BQ queries × BN points per grid cell. m*16 is the contraction
+# dim (m=16 subspaces → 256, MXU-aligned). VMEM footprint per cell:
+#   luts BQ×(m·16)·4B + codes BN×m·4B + onehot BN×(m·16)·4B + out BQ×BN·4B
+#   ≈ 128·256·4 + 512·16·4 + 512·256·4 + 128·512·4 ≈ 0.9 MB  « 16 MB VMEM.
+DEFAULT_BQ = 128
+DEFAULT_BN = 512
+
+
+def _pq_score_kernel(lut_ref, codes_ref, out_ref, *, n_centers: int):
+    codes = codes_ref[...]                                   # (BN, m) int32
+    onehot = (codes[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_centers), 2))
+    onehot = onehot.astype(jnp.float32).reshape(codes.shape[0], -1)  # (BN, m*16)
+    lut = lut_ref[...]                                       # (BQ, m*16)
+    out_ref[...] = jax.lax.dot_general(
+        lut, onehot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (BQ, BN)
+
+
+@functools.partial(jax.jit, static_argnames=("n_centers", "bq", "bn", "interpret"))
+def pq_score_pallas(luts, codes, n_centers: int = 16,
+                    bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
+                    interpret: bool = True):
+    """luts (nq, m, 16) f32, codes (n, m) int32 → (nq, n) f32 scores."""
+    nq, m, k = luts.shape
+    n = codes.shape[0]
+    assert k == n_centers
+    lutmat = luts.reshape(nq, m * k)
+    # pad to block multiples (zero LUT rows / zero codes are harmless: stripped)
+    qpad = (-nq) % bq
+    npad = (-n) % bn
+    lutmat = jnp.pad(lutmat, ((0, qpad), (0, 0)))
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, npad), (0, 0)))
+    grid = (lutmat.shape[0] // bq, codes_p.shape[0] // bn)
+    out = pl.pallas_call(
+        functools.partial(_pq_score_kernel, n_centers=n_centers),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, m * k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (lutmat.shape[0], codes_p.shape[0]), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(lutmat, codes_p)
+    return out[:nq, :n]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_score_ref(luts, codes):
+    """luts (nq, m, 16) f32, codes (n, m) int → scores (nq, n).
+
+    score[q, i] = sum_m luts[q, m, codes[i, m]].
+    """
+    gathered = jnp.take_along_axis(
+        luts[:, None, :, :],                                  # (nq, 1, m, 16)
+        codes[None, :, :, None].astype(jnp.int32), axis=3)    # (nq, n, m, 1)
+    return jnp.sum(gathered[..., 0], axis=-1)
+
+
+def vq_assign_ref(X, C):
+    """Nearest centroid by squared L2. Returns (idx (n,), sqdist (n,))."""
+    d2 = (jnp.sum(C * C, -1)[None, :] - 2.0 * (X @ C.T)
+          + jnp.sum(X * X, -1)[:, None])
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0]
+
+
+def soar_assign_ref(X, rhat, primary, C, lam: float):
+    """SOAR spilled assignment (Theorem 3.1 loss), excluding the primary.
+
+    loss_ij = ||x_i - c_j||^2 + lam * <rhat_i, x_i - c_j>^2
+    Returns (idx (n,), loss-at-idx (n,)); loss includes the ||x||^2 term.
+    """
+    xc = X @ C.T
+    rc = rhat @ C.T
+    rx = jnp.sum(rhat * X, axis=-1)
+    loss = (jnp.sum(C * C, -1)[None, :] - 2.0 * xc
+            + jnp.sum(X * X, -1)[:, None]
+            + lam * (rx[:, None] - rc) ** 2)
+    loss = jnp.where(
+        jax.nn.one_hot(primary, C.shape[0], dtype=bool), jnp.inf, loss)
+    idx = jnp.argmin(loss, axis=-1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(loss, idx[:, None], axis=1)[:, 0]

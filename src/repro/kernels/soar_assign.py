@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused SOAR spilled assignment (Theorem 3.1 loss).
+
+loss_ij = ||c_j||^2 - 2<x_i,c_j> + lam*(<rhat_i,x_i> - <rhat_i,c_j>)^2
+          (+ ||x_i||^2, constant in j)
+
+Two MXU passes per (point-tile × centroid-tile): X·Cᵀ and R̂·Cᵀ, then
+elementwise penalty + primary-exclusion mask + running argmin in VMEM
+scratch — the full (n × c) loss matrix never exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BN = 512
+DEFAULT_BC = 512
+
+
+def _soar_kernel(x_ref, rhat_ref, rx_ref, prim_ref, c_ref, cn_ref,
+                 idx_ref, val_ref, best_val, best_idx, *, bc: int, lam: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_val[...] = jnp.full_like(best_val, jnp.inf)
+        best_idx[...] = jnp.zeros_like(best_idx)
+
+    x = x_ref[...]
+    rhat = rhat_ref[...]
+    rx = rx_ref[...]                                          # (BN, 1)
+    prim = prim_ref[...]                                      # (BN, 1) int32
+    c = c_ref[...]
+    cn = cn_ref[...]                                          # (1, BC)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    rc = jax.lax.dot_general(rhat, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    loss = cn - 2.0 * xc + lam * (rx - rc) ** 2               # (BN, BC)
+    gids = j * bc + jax.lax.broadcasted_iota(jnp.int32, loss.shape, 1)
+    loss = jnp.where(gids == prim, jnp.inf, loss)
+    local_idx = jnp.argmin(loss, axis=-1)
+    local_val = jnp.min(loss, axis=-1)
+    gidx = (j * bc + local_idx).astype(jnp.int32)
+    better = local_val < best_val[:, 0]
+    best_val[...] = jnp.where(better, local_val, best_val[:, 0])[:, None]
+    best_idx[...] = jnp.where(better, gidx, best_idx[:, 0])[:, None]
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _write():
+        idx_ref[...] = best_idx[...]
+        val_ref[...] = best_val[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "bn", "bc", "interpret"))
+def soar_assign_pallas(X, rhat, primary, C, lam: float = 1.0,
+                       bn: int = DEFAULT_BN, bc: int = DEFAULT_BC,
+                       interpret: bool = True):
+    """Returns (idx (n,) int32, loss-at-idx (n,) incl. ||x||^2 term)."""
+    n, d = X.shape
+    c = C.shape[0]
+    npad = (-n) % bn
+    cpad = (-c) % bc
+    Xp = jnp.pad(X.astype(jnp.float32), ((0, npad), (0, 0)))
+    Rp = jnp.pad(rhat.astype(jnp.float32), ((0, npad), (0, 0)))
+    rx = jnp.sum(rhat * X, axis=-1, keepdims=True).astype(jnp.float32)
+    rx = jnp.pad(rx, ((0, npad), (0, 0)))
+    prim = jnp.pad(primary.astype(jnp.int32)[:, None], ((0, npad), (0, 0)),
+                   constant_values=-1)
+    Cp = jnp.pad(C.astype(jnp.float32), ((0, cpad), (0, 0)))
+    cn = jnp.sum(C * C, axis=-1).astype(jnp.float32)
+    cn = jnp.pad(cn, (0, cpad), constant_values=jnp.inf)[None, :]
+    grid = (Xp.shape[0] // bn, Cp.shape[0] // bc)
+    idx, val = pl.pallas_call(
+        functools.partial(_soar_kernel, bc=bc, lam=lam),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Xp.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((Xp.shape[0], 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, 1), jnp.float32),
+            pltpu.VMEM((bn, 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(Xp, Rp, rx, prim, Cp, cn)
+    xn = jnp.sum(X * X, axis=-1)
+    return idx[:n, 0], val[:n, 0] + xn

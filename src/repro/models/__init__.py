@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, SHAPES, ShapeCell, cell_applicable  # noqa: F401
+from repro.models import transformer  # noqa: F401

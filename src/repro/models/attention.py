@@ -1,0 +1,170 @@
+"""GQA attention: blockwise (memory-bounded) prefill/train, cached decode.
+
+Sharding strategy (DESIGN.md §6):
+- train/prefill: K/V expanded to full query heads, heads sharded over
+  "model"; scores never materialize beyond (Bq_chunk × Bkv_chunk) tiles
+  (pure-JAX online-softmax blockwise attention — the portable equivalent of
+  a flash kernel; XLA fuses the inner loop well on TPU).
+- decode: KV cache kept in grouped (g kv heads) form, cache SEQUENCE dim
+  sharded over "model" ("kv_seq" logical axis). Plain jnp softmax over the
+  sharded seq dim lowers, under GSPMD, to local partial attention + tiny
+  all-reduces of the max / denominator / weighted values — the distributed
+  online-softmax merge, without hand-written collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rope, shard
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+
+def attn_def(cfg) -> dict:
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head")),
+        "wk": ParamDef((d, g, hd), ("embed", "kv_heads", "head")),
+        "wv": ParamDef((d, g, hd), ("embed", "kv_heads", "head")),
+        "wo": ParamDef((h, hd, d), ("heads", "head", "embed")),
+    }
+
+
+def _expand_kv(k, h: int):
+    """(B, S, g, hd) → (B, S, h, hd) by repeating each kv head h/g times."""
+    g = k.shape[2]
+    return jnp.repeat(k, h // g, axis=2)
+
+
+def _mask(qpos, kpos, mode: str, n_prefix: int = 0):
+    """qpos (Sq,), kpos (Sk,) → bool (Sq, Sk) True = attend."""
+    if mode == "full":
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    causal = kpos[None, :] <= qpos[:, None]
+    if mode == "prefix":
+        return causal | (kpos[None, :] < n_prefix)
+    return causal
+
+
+def blockwise_attention(q, k, v, mask_mode: str, n_prefix: int = 0,
+                        q_chunk: int = 2048, kv_chunk: int = 2048):
+    """Online-softmax blockwise attention.
+
+    q (B, S, h, hd); k, v (B, S, h, hd) — already expanded. Returns (B,S,h,hd).
+    """
+    B, S, h, hd = q.shape
+    scale = hd ** -0.5
+    if S <= q_chunk:  # single tile: plain fused attention
+        qpos = jnp.arange(S)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        m = _mask(qpos, qpos, mask_mode, n_prefix)
+        logits = jnp.where(m[None, None], logits.astype(jnp.float32), NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+    nq = S // q_chunk
+    nk = S // kv_chunk
+    qc = q.reshape(B, nq, q_chunk, h, hd)
+    kc = k.reshape(B, nk, kv_chunk, h, hd)
+    vc = v.reshape(B, nk, kv_chunk, h, hd)
+
+    def per_q_chunk(qi, qblk):
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj):
+            m_run, l_run, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kc, kj, axis=1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, kj, axis=1, keepdims=False)
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            logits = (jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk)
+                      * scale).astype(jnp.float32)
+            msk = _mask(qpos, kpos, mask_mode, n_prefix)
+            logits = jnp.where(msk[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bhqk,bkhd->bhqd", p.astype(qblk.dtype),
+                                vblk).astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, h, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, h, q_chunk), jnp.float32),
+                jnp.zeros((B, h, q_chunk, hd), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B, qc, h, hd)
+
+    outs = jax.lax.map(lambda i: per_q_chunk(i, qc[:, i]), jnp.arange(nq))
+    # (nq, B, q_chunk, h, hd) → (B, S, h, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, h, hd)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array     # (B, Smax, g, hd)
+    v: jax.Array
+
+
+def attention_block(p, x, positions, cfg, mask_mode: str = "causal",
+                    cache: Optional[KVCache] = None,
+                    cache_index: Optional[jax.Array] = None):
+    """Full attention sub-block (projections + attention + out-proj).
+
+    Prefill/train: cache is None → returns (out, KVCache of this segment).
+    Decode: cache given, x is (B, 1, d), cache_index = current position.
+    """
+    dt = x.dtype
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(dt))
+    q = rope(q, positions, cfg.rope_theta) if mask_mode != "full" else q
+    k = rope(k, positions, cfg.rope_theta) if mask_mode != "full" else k
+
+    if cache is None:
+        q = shard(q, "batch", None, "heads", None)
+        kf = shard(_expand_kv(k, h), "batch", None, "heads", None)
+        vf = shard(_expand_kv(v, h), "batch", None, "heads", None)
+        out = blockwise_attention(q, kf, vf, mask_mode, cfg.n_prefix_embeds)
+        new_cache = KVCache(shard(k, "batch", "kv_seq", "kv_heads", None),
+                            shard(v, "batch", "kv_seq", "kv_heads", None))
+    else:
+        # decode: q (B, 1, h, hd); cache (B, Smax, g, hd), seq-sharded.
+        # The write uses a one-hot select rather than dynamic_update_slice:
+        # GSPMD cannot partition a runtime-index DUS on a SHARDED dim (it
+        # falls back to full replication + f32 round-trips — observed as
+        # 2× full-cache f32 copies per layer); the select is elementwise
+        # over the sharded seq dim and stays fully local.
+        span0 = jnp.arange(cache.k.shape[1])
+        hit = (span0 == cache_index)[None, :, None, None]
+        kc = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
+        vc = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
+        kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
+        m = h // g
+        qg = q.reshape(q.shape[0], 1, g, m, hd)
+        logits = (jnp.einsum("bqgmk,bsgk->bgmqs", qg, kc.astype(dt))
+                  * hd ** -0.5).astype(jnp.float32)
+        span = jnp.arange(kc.shape[1])
+        valid = span[None, :] <= cache_index                      # (1, Smax)
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgmqs,bsgk->bqgmk", w.astype(dt), vc.astype(dt))
+        out = out.reshape(q.shape[0], 1, h, hd)
+        new_cache = KVCache(kc, vc)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return shard(y, "batch", None, "act_embed"), new_cache
+
+
+def init_cache_def(cfg, batch: int, max_seq: int):
+    """ShapeDtypeStruct for one attention layer's KV cache."""
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return KVCache(jax.ShapeDtypeStruct(shape, cdt),
+                   jax.ShapeDtypeStruct(shape, cdt))

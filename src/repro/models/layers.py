@@ -1,0 +1,140 @@
+"""Shared model layers: norms, MLPs, rotary embeddings, logical-axis sharding.
+
+All functions are pure; parameters arrive as dict pytrees (built in
+transformer.py from ParamDefs). Activation sharding is expressed through
+`shard` (logical constraint helper) so the same code runs on 1 CPU device
+and on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef
+
+# ---------------------------------------------------------------- sharding
+
+_MESH_RULES: dict = {}     # set by launch/mesh.py (logical → physical axes)
+
+
+def set_logical_rules(rules: dict):
+    global _MESH_RULES
+    _MESH_RULES = dict(rules)
+
+
+def get_logical_rules() -> dict:
+    return dict(_MESH_RULES)
+
+
+def shard(x, *axes):
+    """Apply a logical sharding constraint if a mesh is active."""
+    if not _MESH_RULES:
+        return x
+    spec = P(*[_MESH_RULES.get(a, None) if a is not None else None
+               for a in axes])
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:
+        return x   # no mesh context (e.g. plain CPU tests)
+
+
+# ------------------------------------------------------------------- norms
+
+def rmsnorm_def(d: int) -> dict:
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# -------------------------------------------------------------------- MLPs
+
+def mlp_def(cfg, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": ParamDef((d, 2, d_ff), ("embed", None, "mlp")),
+            "wo": ParamDef((d_ff, d), ("mlp", "embed")),
+        }
+    return {   # squared_relu / gelu: plain 2-matrix MLP
+        "wi": ParamDef((d, d_ff), ("embed", "mlp")),
+        "wo": ParamDef((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, cfg):
+    dt = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        h = jnp.einsum("...d,dgf->...gf", x, p["wi"].astype(dt))
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = jax.nn.silu(gate) if cfg.mlp == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        if cfg.mlp == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+    h = shard(h, "batch", None, "mlp")
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, hd); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+
+def embed_def(cfg) -> dict:
+    return {"table": ParamDef((cfg.vocab_padded, cfg.d_model),
+                              ("vocab", "embed"), scale=1.0)}
+
+
+def embed(p, tokens, cfg):
+    out = jnp.take(p["table"], tokens, axis=0)
+    return shard(out.astype(cfg.compute_dtype), "batch", None, "act_embed")
+
+
+def unembed(p, x, cfg):
+    """Final projection to (padded) vocab logits, sharded over vocab."""
+    logits = jnp.einsum("...d,vd->...v", x,
+                        p["table"].astype(x.dtype))
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "batch", None, "vocab")
+
+
+def head_def(cfg) -> dict:
+    """Separate output head (used when not tying to the embedding)."""
+    return {"w": ParamDef((cfg.d_model, cfg.vocab_padded),
+                          ("embed", "vocab"))}
+
+
+def softmax_xent(logits, labels, vocab_size: int):
+    """Cross entropy over the (padded) vocab dim; padded ids never occur in
+    labels. fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    gold = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    return lse - gold

@@ -1,0 +1,75 @@
+"""Minimal parameter-definition system (no flax): each leaf carries a shape,
+logical axis names, and an init scale. Supports three materializations:
+
+- `abstract(defs)`  → ShapeDtypeStruct pytree (dry-run lowering, no memory)
+- `init(key, defs)` → real arrays, per-leaf deterministic keys
+- `pspecs(defs, rules)` → jax.sharding.PartitionSpec pytree
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim (None = replicated)
+    init: str = "normal"                 # "normal" | "zeros" | "ones" | "ssm_a"
+    scale: float = 1.0                   # stddev multiplier (normal), fan-in applied
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def abstract(defs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+        is_leaf=_is_def)
+
+
+def init(key, defs, dtype=jnp.float32):
+    """Deterministic per-leaf init: key folded with the leaf path hash."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=_is_def)
+    leaves = []
+    for path, d in flat:
+        tag = jax.tree_util.keystr(path)
+        h = int.from_bytes(hashlib.md5(tag.encode()).digest()[:4], "little")
+        k = jax.random.fold_in(key, h)
+        if d.init == "zeros":
+            leaves.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            leaves.append(jnp.ones(d.shape, dtype))
+        elif d.init == "ssm_a":
+            # mamba A init: -log-spaced over state dim (last axis)
+            n = d.shape[-1]
+            a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=dtype), d.shape)
+            leaves.append(jnp.log(a))    # stored as log(-A) ; A = -exp(.)
+        else:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[0], 1)
+            if len(d.shape) >= 3:        # stacked (group) leading dim
+                fan_in = d.shape[1]
+            std = d.scale / np.sqrt(max(fan_in, 1))
+            leaves.append(jax.random.normal(k, d.shape, dtype) * std)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def pspecs(defs, rules: dict):
+    def spec(d: ParamDef):
+        return P(*[rules.get(a, None) if a is not None else None
+                   for a in d.axes])
+    return jax.tree.map(spec, defs, is_leaf=_is_def)
+
+
+def logical_shapes(defs):
+    return jax.tree.map(lambda d: d.shape, defs, is_leaf=_is_def)

@@ -1,0 +1,367 @@
+"""Recurrent mixers: Mamba (S6 selective SSM), mLSTM and sLSTM (xLSTM).
+
+All three expose the same interface as attention_block:
+    out, new_state = <block>(params, x, cfg, state=None)
+state=None → sequence mode (train/prefill), scanning over time with a
+carried recurrent state; returns the final state for decode handoff.
+state given + S==1 → single decode step.
+
+Sharding: mamba's inner width carries the "mlp" logical axis; mLSTM's value
+dim carries "head" (xLSTM's 4 heads don't divide a 16-way model axis, so the
+256-wide value dim is the sharded one — see configs/xlstm_350m.py rules).
+sLSTM is tiny and replicated (batch-sharded only).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import shard
+from repro.models.params import ParamDef
+
+TIME_CHUNK = 64
+
+
+def chunked_scan(step, init, xs, length: int):
+    """Two-level time scan with per-chunk gradient checkpointing.
+
+    A flat S-step scan inside a remat'd block makes AD save O(S) per-step
+    residuals (measured: 4.3 GB/layer for jamba's mamba at S=4096); chunking
+    with jax.checkpoint saves the carry only every TIME_CHUNK steps and
+    recomputes inside the chunk — O(S/64) memory for ~1.3x recompute.
+    """
+    if length <= TIME_CHUNK or length % TIME_CHUNK != 0:
+        return jax.lax.scan(step, init, xs)
+    nch = length // TIME_CHUNK
+
+    def chunk_step(carry, xs_chunk):
+        return jax.lax.scan(step, carry, xs_chunk)
+
+    chunk_step = jax.checkpoint(chunk_step)
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((nch, TIME_CHUNK) + a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(chunk_step, init, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((length,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ------------------------------------------------------------------- Mamba
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, W-1, di) last conv inputs
+    h: jax.Array      # (B, di, N) SSM state
+
+
+def mamba_def(cfg) -> dict:
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": ParamDef((d, 2, di), ("embed", None, "mlp")),
+        "conv_w": ParamDef((W, di), (None, "mlp"), scale=1.0),
+        "conv_b": ParamDef((di,), ("mlp",), init="zeros"),
+        "x_proj": ParamDef((di, dt_rank + 2 * N), ("mlp", None)),
+        "dt_w": ParamDef((dt_rank, di), (None, "mlp")),
+        "dt_b": ParamDef((di,), ("mlp",), init="zeros"),
+        "A_log": ParamDef((di, N), ("mlp", None), init="ssm_a"),
+        "D": ParamDef((di,), ("mlp",), init="ones"),
+        "out_proj": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def mamba_block(p, x, cfg, state: Optional[MambaState] = None):
+    dt_ = x.dtype
+    B, S, d = x.shape
+    di, N, W = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    dt_rank = max(d // 16, 1)
+
+    xz = jnp.einsum("bsd,dgi->bsgi", x, p["in_proj"].astype(dt_))
+    xin, z = xz[:, :, 0, :], xz[:, :, 1, :]                     # (B, S, di)
+    xin = shard(xin, "batch", None, "mlp")
+
+    # causal depthwise conv over time
+    if state is None:
+        pad = jnp.zeros((B, W - 1, di), dt_)
+    else:
+        pad = state.conv.astype(dt_)
+    xpad = jnp.concatenate([pad, xin], axis=1)                  # (B, S+W-1, di)
+    conv = sum(xpad[:, i:i + S, :] * p["conv_w"][i].astype(dt_)
+               for i in range(W))
+    xin_c = jax.nn.silu(conv + p["conv_b"].astype(dt_))
+    new_conv = xpad[:, S:, :]                                   # last W-1 inputs
+
+    proj = jnp.einsum("bsi,ik->bsk", xin_c, p["x_proj"].astype(dt_))
+    dt_raw = jnp.einsum("bsr,ri->bsi", proj[..., :dt_rank],
+                        p["dt_w"].astype(dt_)) + p["dt_b"].astype(dt_)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32))         # (B, S, di)
+    Bm = proj[..., dt_rank:dt_rank + N].astype(jnp.float32)     # (B, S, N)
+    Cm = proj[..., dt_rank + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di, N)
+
+    h0 = (jnp.zeros((B, di, N), jnp.float32) if state is None
+          else state.h.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dt_t, bt, ct = inp                                  # (B,di),(B,di),(B,N),(B,N)
+        decay = jnp.exp(dt_t[:, :, None] * A[None])             # (B, di, N)
+        h = h * decay + (dt_t * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, ct)
+        return h, y
+
+    xs = (xin_c.transpose(1, 0, 2).astype(jnp.float32),
+          delta.transpose(1, 0, 2), Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    hT, ys = chunked_scan(step, h0, xs, S)
+    y = ys.transpose(1, 0, 2).astype(dt_)                        # (B, S, di)
+    y = y + xin_c * p["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return shard(out, "batch", None, "act_embed"), MambaState(
+        new_conv.astype(cdt), hT.astype(cdt))
+
+
+def mamba_state_def(cfg, batch: int):
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return MambaState(
+        jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, cfg.d_inner),
+                             cdt),
+        jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state_dim),
+                             cdt))
+
+
+# ------------------------------------------------------------------- mLSTM
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, H, dv, dk) matrix memory
+    n: jax.Array      # (B, H, dk) normalizer
+    m: jax.Array      # (B, H) log-space stabilizer
+
+
+def mlstm_def(cfg) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, H, hd), ("embed", "heads", None)),
+        "wv": ParamDef((d, H, hd), ("embed", "heads", "head")),
+        "wi": ParamDef((d, H), ("embed", "heads")),
+        "wf": ParamDef((d, H), ("embed", "heads")),
+        "wog": ParamDef((d, H, hd), ("embed", "heads", "head")),
+        "wo": ParamDef((H, hd, d), ("heads", "head", "embed")),
+    }
+
+
+MLSTM_CHUNK = 64
+
+
+def _mlstm_sequential(q, k, v, ig, fg, C0, n0, m0, S):
+    """Reference per-step recurrence (used for decode and as the oracle for
+    the chunkwise form — tests/test_mlstm_chunkwise.py)."""
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        qt, kt, vt = (t.astype(jnp.float32) for t in (qt, kt, vt))
+        logf = jax.nn.log_sigmoid(ft)                           # (B, H)
+        m_new = jnp.maximum(logf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * \
+            jnp.einsum("bhv,bhk->bhvk", vt, kt)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(t.transpose(1, 0, 2, 3) if t.ndim == 4 else t.transpose(1, 0, 2)
+               for t in (q, k, v, ig, fg))
+    (CT, nT, mT), hs = chunked_scan(step, (C0, n0, m0), xs, S)
+    return hs.transpose(1, 0, 2, 3), (CT, nT, mT)
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0, S, L: int = MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM — EXACT log-space reformulation of the
+    sequential recurrence (§Perf H1): intra-chunk terms become (L×L) MXU
+    matmuls; the (dv×dk) matrix state is materialized once per chunk instead
+    of once per step (64× less state traffic, the dominant HBM term of
+    xlstm train_4k at baseline).
+
+    Derivation: with A_t = Σ_{u≤t} log σ(f_u) (within chunk) and b_t = ĩ_t,
+    the sequential stabilizer recursion m_t = max(logσ(f_t)+m_{t-1}, b_t)
+    unrolls to m_t = max(m_prev + A_t, A_t + cummax_s≤t(b_s − A_s)), so all
+    per-step quantities are cumsums/cummaxes — no sequential dependency.
+    """
+    B, _, H, hd = q.shape
+    nch = S // L
+
+    def to_chunks(t):
+        if t.ndim == 4:   # (B,S,H,hd) → (nch, B, H, L, hd)
+            return t.reshape(B, nch, L, H, hd).transpose(1, 0, 3, 2, 4)
+        return t.reshape(B, nch, L, H).transpose(1, 0, 3, 2)    # (nch,B,H,L)
+
+    qc, kc, vc = (to_chunks(t.astype(jnp.float32)) for t in (q, k, v))
+    ac = to_chunks(jax.nn.log_sigmoid(fg))
+    bc = to_chunks(ig)
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk(carry, inp):
+        Cp, np_, mp = carry                                     # prev state
+        qb, kb, vb, a, b = inp                                  # (B,H,L,*)
+        A = jnp.cumsum(a, axis=-1)                              # (B,H,L)
+        m = jnp.maximum(mp[..., None] + A,
+                        A + jax.lax.cummax(b - A, axis=b.ndim - 1))  # (B,H,L)
+        E = A + mp[..., None] - m                               # ≤ 0
+        D = (A[..., :, None] - A[..., None, :]
+             + b[..., None, :] - m[..., :, None])               # (B,H,L,L)
+        W = jnp.where(tril, jnp.exp(D), 0.0)
+        qk = jnp.einsum("bhtk,bhsk->bhts", qb, kb)
+        num = (jnp.einsum("bhts,bhsv->bhtv", W * qk, vb)
+               + jnp.exp(E)[..., None]
+               * jnp.einsum("bhvk,bhtk->bhtv", Cp, qb))
+        nvec = (jnp.einsum("bhts,bhsk->bhtk", W, kb)
+                + jnp.exp(E)[..., None] * np_[..., None, :])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhtk,bhtk->bht", nvec, qb)),
+                          jnp.exp(-m))
+        h = num / den[..., None]                                # (B,H,L,dv)
+        # chunk-end state
+        mL = m[..., -1]
+        AL = A[..., -1:]
+        w_end = jnp.exp(AL - A + b - mL[..., None])             # (B,H,L)
+        decay = jnp.exp(AL[..., 0] + mp - mL)                   # (B,H)
+        Cn = (jnp.einsum("bhs,bhsv,bhsk->bhvk", w_end, vb, kb)
+              + decay[..., None, None] * Cp)
+        nn = (jnp.einsum("bhs,bhsk->bhk", w_end, kb)
+              + decay[..., None] * np_)
+        return (Cn, nn, mL), h
+
+    (CT, nT, mT), hs = jax.lax.scan(chunk, (C0, n0, m0),
+                                    (qc, kc, vc, ac, bc))
+    # (nch, B, H, L, dv) → (B, S, H, dv)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return h, (CT, nT, mT)
+
+
+def mlstm_block(p, x, cfg, state: Optional[MLSTMState] = None):
+    dt_ = x.dtype
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt_)) * hd ** -0.5
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt_)) * hd ** -0.5
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt_))
+    v = shard(v, "batch", None, "heads", "head")
+    ig = jnp.einsum("bsd,dh->bsh", x, p["wi"].astype(dt_)).astype(jnp.float32)
+    fg = jnp.einsum("bsd,dh->bsh", x, p["wf"].astype(dt_)).astype(jnp.float32)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["wog"].astype(dt_)))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = (state.C.astype(jnp.float32),
+                      state.n.astype(jnp.float32),
+                      state.m.astype(jnp.float32))
+
+    if S % MLSTM_CHUNK == 0 and S >= 2 * MLSTM_CHUNK:
+        hs, (CT, nT, mT) = _mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0, S)
+        h = hs.astype(dt_) * og
+    else:
+        hs, (CT, nT, mT) = _mlstm_sequential(q, k, v, ig, fg, C0, n0, m0, S)
+        h = hs.astype(dt_) * og
+    out = jnp.einsum("bshk,hkd->bsd", h, p["wo"].astype(dt_))
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return shard(out, "batch", None, "act_embed"), MLSTMState(
+        CT.astype(cdt), nT.astype(cdt), mT.astype(jnp.float32))
+
+
+def mlstm_state_def(cfg, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return MLSTMState(jax.ShapeDtypeStruct((batch, H, hd, hd), cdt),
+                      jax.ShapeDtypeStruct((batch, H, hd), cdt),
+                      jax.ShapeDtypeStruct((batch, H), jnp.float32))
+
+
+# ------------------------------------------------------------------- sLSTM
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, H, du)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+SLSTM_BLOCKS = 4     # block-diagonal recurrence, 4 blocks/head (xLSTM paper)
+
+
+def _slstm_dims(cfg):
+    """Effective (sub-)heads: H × SLSTM_BLOCKS independent recurrences.
+
+    The block-diagonal R makes each (head, block) a self-contained scalar
+    LSTM over bs units — and H·nb = 16 sub-heads shard exactly over the
+    16-way model axis ("shead"), so the per-timestep recurrence is a LOCAL
+    (bs × bs) matmul with zero collectives (§Perf H1b: the dense
+    full-head R cost 1.24 TB/step of HBM + a per-step grad all-reduce).
+    """
+    H = cfg.n_heads
+    du = cfg.d_model // H
+    nb = SLSTM_BLOCKS if du % SLSTM_BLOCKS == 0 else 1
+    return H * nb, du // nb
+
+
+def slstm_def(cfg) -> dict:
+    d = cfg.d_model
+    He, bs = _slstm_dims(cfg)
+    return {
+        "wx": ParamDef((d, 4, He, bs), ("embed", None, "shead", None)),
+        "r": ParamDef((4, He, bs, bs), (None, "shead", None, None), scale=0.5),
+        "b": ParamDef((4, He, bs), (None, "shead", None), init="zeros"),
+        "wo": ParamDef((He, bs, d), ("shead", None, "embed")),
+    }
+
+
+def slstm_block(p, x, cfg, state: Optional[SLSTMState] = None):
+    dt_ = x.dtype
+    B, S, d = x.shape
+    He, bs = _slstm_dims(cfg)
+    zx = jnp.einsum("bsd,dghu->bsghu", x, p["wx"].astype(dt_)
+                    ).astype(jnp.float32)                       # (B,S,4,He,bs)
+    zx = shard(zx, "batch", None, None, "shead", None)
+    R = p["r"].astype(jnp.float32)
+    bias = p["b"].astype(jnp.float32)
+
+    if state is None:
+        z0 = jnp.zeros((B, He, bs), jnp.float32)
+        st0 = (z0, z0, z0, jnp.full((B, He, bs), -1e30, jnp.float32))
+    else:
+        st0 = tuple(s.astype(jnp.float32) for s in state)
+
+    def step(carry, zt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhu,ghuv->bghv", h, R)                # (B,4,He,bs)
+        pre = zt + rec + bias[None]
+        it, ft, zt_, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(zt_)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    (cT, nT, hT, mT), hs = chunked_scan(
+        step, st0, zx.transpose(1, 0, 2, 3, 4), S)
+    hseq = hs.transpose(1, 0, 2, 3).astype(dt_)                 # (B, S, He, bs)
+    out = jnp.einsum("bshu,hud->bsd", hseq, p["wo"].astype(dt_))
+    return shard(out, "batch", None, "act_embed"), SLSTMState(
+        cT.astype(jnp.float32), nT.astype(jnp.float32),
+        hT.astype(jnp.float32), mT.astype(jnp.float32))
+
+
+def slstm_state_def(cfg, batch: int):
+    He, bs = _slstm_dims(cfg)
+    s = jax.ShapeDtypeStruct((batch, He, bs), jnp.float32)
+    return SLSTMState(s, s, s, s)

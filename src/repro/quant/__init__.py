@@ -1,0 +1,1 @@
+from repro.quant import pq, int8, anisotropic  # noqa: F401

@@ -1,0 +1,105 @@
+"""Anisotropic (score-aware) quantization loss — ScaNN, Guo et al. [8].
+
+The paper trains its VQ and PQ with the anisotropic loss: residual error
+parallel to the datapoint costs more than orthogonal error, because parallel
+error perturbs large inner products most. For weight w(t)=I(t>=T):
+
+    loss(x, c) = h_par ||P_x (x-c)||^2 + h_perp ||(I - P_x)(x-c)||^2
+
+with eta = h_par/h_perp = ((d-1) T^2) / (1 - T^2) (Theorem 3.3 of [8] shape).
+The paper's own Appendix A.1 notes SOAR's Theorem 3.1 "is very similar to the
+analysis behind Theorem 3.3 of [8]" — both are E over hypersphere queries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import chunked_map
+
+
+def eta_from_threshold(T: float, d: int) -> float:
+    return float((d - 1) * T * T / max(1.0 - T * T, 1e-9))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def anisotropic_assign(X, C, eta: float, chunk: int = 8192):
+    """argmin_j of the anisotropic loss.
+
+    loss_ij = ||x-c||^2 + (eta-1) <x_hat, x-c>^2   (h_perp normalized to 1)
+    Same two-GEMM structure as the SOAR loss with r_hat -> x_hat.
+    """
+    xn = jnp.maximum(jnp.linalg.norm(X, axis=-1, keepdims=True), 1e-12)
+    xhat = X / xn
+    Cn = jnp.sum(C * C, axis=-1)
+    d = X.shape[-1]
+    packed = jnp.concatenate([X, xhat], axis=-1)
+
+    def f(blk):
+        xb, hb = blk[:, :d], blk[:, d:]
+        xc = xb @ C.T
+        hc = hb @ C.T
+        hx = jnp.sum(hb * xb, axis=-1)
+        loss = Cn[None, :] - 2.0 * xc + (eta - 1.0) * (hx[:, None] - hc) ** 2
+        return jnp.argmin(loss, axis=-1).astype(jnp.int32)
+
+    return chunked_map(f, packed, chunk)
+
+
+class AnisoStats(NamedTuple):
+    A: jax.Array   # (c, d, d) accumulated weighting matrices
+    b: jax.Array   # (c, d) accumulated rhs
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def _accumulate(X, assign, eta: float, c: int) -> AnisoStats:
+    xn2 = jnp.maximum(jnp.sum(X * X, axis=-1, keepdims=True), 1e-12)
+    # W_i = I + (eta-1) x_hat x_hat^T ;  b_i = W_i x_i = x_i + (eta-1) x_i = eta x_i
+    # (since x_hat x_hat^T x = x). Accumulate A_j = sum W_i, b_j = sum eta x_i.
+    outer = jnp.einsum("ni,nj->nij", X, X) / xn2[:, :, None]
+    W = jnp.eye(X.shape[-1])[None] + (eta - 1.0) * outer
+    A = jax.ops.segment_sum(W, assign, num_segments=c)
+    b = jax.ops.segment_sum(eta * X, assign, num_segments=c)
+    return AnisoStats(A, b)
+
+
+def anisotropic_kmeans(key, X, c: int, eta: float, iters: int = 10,
+                       chunk: int = 8192, accum_chunk: int = 4096):
+    """Anisotropic-loss VQ: score-aware assignment + exact per-centroid solve.
+
+    Memory: c*d^2 for the normal matrices; intended for the benchmark scale
+    (c<=4096, d<=128). For larger problems use Euclidean training +
+    anisotropic assignment.
+    """
+    from repro.core.kmeans import train_kmeans  # init from Euclidean solution
+    km = train_kmeans(key, X, c, iters=3, chunk=chunk)
+    C = km.centroids
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    assign = None
+    for _ in range(iters):
+        assign = anisotropic_assign(X, C, eta, chunk=chunk)
+        # accumulate normal equations in chunks (bounded by accum_chunk*d^2)
+        A = jnp.zeros((c, X.shape[-1], X.shape[-1]))
+        b = jnp.zeros((c, X.shape[-1]))
+        for s in range(0, n, accum_chunk):
+            st = _accumulate(X[s:s + accum_chunk], assign[s:s + accum_chunk], eta, c)
+            A = A + st.A
+            b = b + st.b
+        counts = jax.ops.segment_sum(jnp.ones((n,)), assign, num_segments=c)
+        reg = 1e-6 * jnp.eye(X.shape[-1])[None]
+        C_new = jnp.linalg.solve(A + reg, b[..., None])[..., 0]
+        C = jnp.where(counts[:, None] > 0, C_new, C)
+    assign = anisotropic_assign(X, C, eta, chunk=chunk)
+    return C, assign
+
+
+def anisotropic_loss_values(X, C, assign, eta: float):
+    """Per-point anisotropic loss (for tests)."""
+    r = X - C[assign]
+    xn = jnp.maximum(jnp.linalg.norm(X, axis=-1), 1e-12)
+    rpar = jnp.sum(r * X, axis=-1) / xn
+    return jnp.sum(r * r, axis=-1) + (eta - 1.0) * rpar ** 2

@@ -1,0 +1,32 @@
+"""Scalar int8 quantization for the highest-bitrate reranking representation."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Int8Data(NamedTuple):
+    q: jax.Array       # (n, d) int8
+    scale: jax.Array   # (n,) float32 per-row scale
+
+
+@jax.jit
+def int8_quantize(X) -> Int8Data:
+    amax = jnp.maximum(jnp.max(jnp.abs(X), axis=-1), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(X / scale[:, None]), -127, 127).astype(jnp.int8)
+    return Int8Data(q, scale.astype(jnp.float32))
+
+
+@jax.jit
+def int8_dequantize(data: Int8Data) -> jax.Array:
+    return data.q.astype(jnp.float32) * data.scale[:, None]
+
+
+@jax.jit
+def int8_score(q, data: Int8Data, ids) -> jax.Array:
+    """MIPS scores of query against selected int8 rows (rerank path)."""
+    rows = data.q[ids].astype(jnp.float32) * data.scale[ids][:, None]
+    return rows @ q

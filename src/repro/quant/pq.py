@@ -1,0 +1,97 @@
+"""Product quantization (Jegou et al. [9]) — 16 centers per subspace.
+
+16 centers/subspace is the paper's choice ("usually chosen for amenability to
+SIMD"); on TPU the same codebook shape is chosen for VMEM-residency + one-hot
+MXU contraction (see kernels/pq_score.py). Codes are uint8 (one code < 16 per
+subspace; we keep one byte per subspace for simplicity of layout — the memory
+MODEL in benchmarks uses the paper's 4-bit accounting).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import train_kmeans
+from repro.utils import chunked_map
+
+
+class PQCodebook(NamedTuple):
+    centers: jax.Array   # (m, 16, s) float32 — m subspaces, 16 centers, s dims
+
+
+def train_pq(key, X, n_subspaces: int, n_centers: int = 16, iters: int = 8,
+             sample: int = 100_000) -> PQCodebook:
+    """Train per-subspace k-means codebooks on (a sample of) X."""
+    n, d = X.shape
+    assert d % n_subspaces == 0, (d, n_subspaces)
+    s = d // n_subspaces
+    if n > sample:
+        sel = jax.random.choice(key, n, (sample,), replace=False)
+        X = X[sel]
+    Xs = X.reshape(-1, n_subspaces, s)
+    cents = []
+    for m in range(n_subspaces):
+        km = train_kmeans(jax.random.fold_in(key, m), Xs[:, m, :], n_centers,
+                          iters=iters, chunk=32768)
+        cents.append(km.centroids)
+    return PQCodebook(jnp.stack(cents))
+
+
+@jax.jit
+def pq_encode(cb: PQCodebook, X) -> jax.Array:
+    """Encode rows of X → (n, m) uint8 codes."""
+    n, d = X.shape
+    m, k, s = cb.centers.shape
+    Xs = X.reshape(n, m, s)
+
+    def f(xb):
+        # (chunk, m, s) vs (m, k, s) → distances (chunk, m, k)
+        d2 = (jnp.sum(xb * xb, -1)[..., None]
+              - 2.0 * jnp.einsum("bms,mks->bmk", xb, cb.centers)
+              + jnp.sum(cb.centers * cb.centers, -1)[None])
+        return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+    return chunked_map(f, Xs, 16384)
+
+
+@jax.jit
+def pq_decode(cb: PQCodebook, codes) -> jax.Array:
+    """(n, m) codes → (n, d) reconstruction."""
+    n, m = codes.shape
+    recon = jnp.take_along_axis(
+        cb.centers[None], codes[:, :, None, None].astype(jnp.int32), axis=2)
+    return recon[:, :, 0, :].reshape(n, -1)
+
+
+@jax.jit
+def pq_lut(cb: PQCodebook, q) -> jax.Array:
+    """Per-query inner-product lookup table: (m, 16) for a (d,) query.
+
+    score(q, decode(code)) == sum_m lut[m, code[m]].
+    """
+    m, k, s = cb.centers.shape
+    qs = q.reshape(m, s)
+    return jnp.einsum("ms,mks->mk", qs, cb.centers)
+
+
+@jax.jit
+def pq_score(lut, codes) -> jax.Array:
+    """Asymmetric PQ scores: (m,16) lut × (n,m) codes → (n,) scores."""
+    return jnp.sum(
+        jnp.take_along_axis(lut[None], codes[:, :, None].astype(jnp.int32),
+                            axis=2)[:, :, 0], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pq_score_batch(luts, codes) -> jax.Array:
+    """(nq, m, 16) luts × (n, m) codes → (nq, n) scores (one-hot MXU form).
+
+    This is the TPU-native formulation: expand codes to one-hot and contract
+    on the MXU rather than per-element gathers (see DESIGN.md §3).
+    """
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), luts.shape[-1],
+                            dtype=luts.dtype)          # (n, m, 16)
+    return jnp.einsum("qmk,nmk->qn", luts, onehot)

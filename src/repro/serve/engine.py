@@ -1,0 +1,58 @@
+"""Serving engine: batched prefill + greedy decode over the model zoo.
+
+`serve_step` (single decode step over a full KV cache) is the function the
+decode_32k / long_500k dry-run cells lower; `generate` is the CPU-runnable
+driver used by examples and tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig):
+    """fn(params, token (B,1), caches, index) → (next_token (B,1), caches)."""
+
+    def serve_step(params, token, caches, index):
+        logits, caches = T.decode_step(params, token, caches, index, cfg)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], caches
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, inputs):
+        return T.prefill(params, inputs, cfg, max_seq=max_seq)
+    return prefill_step
+
+
+class ServeEngine:
+    """Minimal batched greedy-decoding engine (CPU-runnable at smoke scale)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(make_prefill_step(cfg, max_seq))
+        self._step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+    def generate(self, inputs: dict, n_new: int):
+        """inputs: {"tokens": (B, S)} (+ patches for vlm). Greedy decode."""
+        logits, caches = self._prefill(self.params, inputs)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        prefix = (self.cfg.n_prefix_embeds
+                  if self.cfg.frontend == "vision" else 0)
+        start = inputs["tokens"].shape[1] + prefix
+        out = [tok]
+        for i in range(n_new - 1):
+            tok, caches = self._step(self.params, tok, caches,
+                                     jnp.asarray(start + i, jnp.int32))
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

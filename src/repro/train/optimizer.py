@@ -1,0 +1,65 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (no optax dep).
+
+Optimizer state mirrors the param pytree → it inherits the params' sharding
+(FSDP'd optimizer state for free — ZeRO-style, see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init(params) -> AdamWState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(jnp.zeros((), jnp.int32), z,
+                      jax.tree.map(jnp.zeros_like, params))
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state: AdamWState, params, lr_fn, *, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * jnp.square(g),
+                     state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = lr_fn(state.step)
+
+    def upd(p, mo, vo):
+        mhat = mo / bc1
+        vhat = vo / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step, m, v), {
+        "grad_norm": gn, "lr": lr}

@@ -1,0 +1,135 @@
+"""Training step factory + driver loop.
+
+- Gradient accumulation: the global batch is split into `accum` microbatches
+  scanned inside the jit'd step (bounds activation memory; under pjit the
+  per-microbatch gradient psum overlaps the next microbatch's backward —
+  the standard compute/comm overlap).
+- Fault tolerance: CheckpointManager integration, preemption-safe saves
+  (SIGTERM → save-and-exit), step watchdog (straggler surfacing), and
+  deterministic data resume from the step counter alone.
+"""
+from __future__ import annotations
+
+import functools
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, lr_fn, accum: int = 1,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns jit-able fn(params, opt_state, batch) → (params, state, metrics)."""
+
+    def micro_loss(params, micro):
+        return T.loss_fn(params, micro, cfg)
+
+    def step_fn(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            micros = jax.tree.map(split, batch)
+
+            def body(carry, micro):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(micro_loss)(params, micro)
+                return (acc_loss + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zero), micros)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        params, opt_state, metrics = opt.update(
+            grads, opt_state, params, lr_fn,
+            weight_decay=weight_decay, clip_norm=clip_norm)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step_fn
+
+
+class Watchdog:
+    """Surfaces straggling steps (the single-process analogue of per-host
+    heartbeat monitoring): if a step exceeds `factor`× the running median,
+    it is logged; the callback can trigger checkpoint+respawn at scale."""
+
+    def __init__(self, factor: float = 3.0, warn=print):
+        self.durations = []
+        self.factor = factor
+        self.warn = warn
+
+    def observe(self, dt: float, step: int):
+        if len(self.durations) >= 5:
+            med = sorted(self.durations)[len(self.durations) // 2]
+            if dt > self.factor * med:
+                self.warn(f"[watchdog] step {step} took {dt:.2f}s "
+                          f"(median {med:.2f}s) — straggler suspected")
+        self.durations.append(dt)
+        if len(self.durations) > 100:
+            self.durations.pop(0)
+
+
+def train(cfg: ModelConfig, pipeline, steps: int, lr: float = 3e-4,
+          accum: int = 1, ckpt_manager=None, ckpt_every: int = 100,
+          log_every: int = 10, params=None, seed: int = 0,
+          on_log: Optional[Callable] = None):
+    """CPU-runnable end-to-end driver (used by examples/train_lm.py)."""
+    lr_fn = opt.warmup_cosine(lr, warmup=max(steps // 20, 10), total=steps)
+    step_fn = jax.jit(make_train_step(cfg, lr_fn, accum=accum),
+                      donate_argnums=(0, 1))
+
+    start_step = 0
+    opt_state = None
+    if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
+        params, opt_state, start_step = ckpt_manager.restore_train_state(cfg)
+        print(f"[train] resumed from step {start_step}")
+    if params is None:
+        params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    if opt_state is None:
+        opt_state = opt.init(params)
+
+    preempted = {"flag": False}
+
+    def _on_term(sig, frame):
+        preempted["flag"] = True
+    try:
+        signal.signal(signal.SIGTERM, _on_term)
+    except ValueError:
+        pass   # non-main thread (tests)
+
+    wd = Watchdog()
+    losses = []
+    for step in range(start_step, steps):
+        t0 = time.time()
+        batch = pipeline.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        dt = time.time() - t0
+        wd.observe(dt, step)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            msg = (f"step {step:5d} loss {loss:.4f} "
+                   f"gnorm {float(metrics['grad_norm']):.3f} "
+                   f"lr {float(metrics['lr']):.2e} {dt:.2f}s")
+            print(msg)
+            if on_log:
+                on_log(step, metrics)
+        should_ckpt = (ckpt_manager is not None
+                       and (step % ckpt_every == 0 or step == steps - 1
+                            or preempted["flag"]))
+        if should_ckpt:
+            ckpt_manager.save_train_state(step + 1, params, opt_state)
+        if preempted["flag"]:
+            print(f"[train] preemption signal → saved at step {step}, exiting")
+            break
+    return params, opt_state, losses

@@ -1,0 +1,44 @@
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import PipelineSpec, TokenPipeline, for_model
+
+
+def test_deterministic_and_resumable():
+    p = TokenPipeline(PipelineSpec(vocab_size=1000, seq_len=32, global_batch=8))
+    b1 = p.batch_at(7)
+    b2 = p.batch_at(7)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    b3 = p.batch_at(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_labels_are_next_tokens():
+    p = TokenPipeline(PipelineSpec(vocab_size=1000, seq_len=32, global_batch=4))
+    b = p.batch_at(0)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_partitions_batch():
+    p = TokenPipeline(PipelineSpec(vocab_size=1000, seq_len=16, global_batch=8))
+    shards = [p.batch_at(3, shard=i, n_shards=4) for i in range(4)]
+    assert all(s["tokens"].shape == (2, 16) for s in shards)
+    # shards are distinct
+    assert not np.array_equal(shards[0]["tokens"], shards[1]["tokens"])
+
+
+def test_tokens_in_vocab_range():
+    p = TokenPipeline(PipelineSpec(vocab_size=101, seq_len=64, global_batch=4))
+    b = p.batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 101
+
+
+def test_modality_batches():
+    cfg = get_config("hubert-xlarge").smoke_config()
+    p = for_model(cfg, seq_len=16, global_batch=2)
+    b = p.batch_at(0)
+    assert "frames" in b and b["frames"].shape == (2, 16, cfg.d_model)
+    cfg = get_config("paligemma-3b").smoke_config()
+    p = for_model(cfg, seq_len=16, global_batch=2)
+    b = p.batch_at(0)
+    assert b["patches"].shape == (2, cfg.n_prefix_embeds, cfg.d_model)

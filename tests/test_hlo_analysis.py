@@ -1,0 +1,69 @@
+"""Validate the HLO static analyzer against hand-computable programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, shape_bytes
+
+
+def _compile_text(f, *abstract):
+    return jax.jit(f).lower(*abstract).compile().as_text()
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]") == 24
+    assert shape_bytes("bf16[128]{0}") == 256
+    assert shape_bytes("(f32[2], s8[4])") == 12
+    assert shape_bytes("pred[]") == 1
+
+
+def test_single_matmul_flops():
+    f = lambda a, b: a @ b
+    txt = _compile_text(f, jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                        jax.ShapeDtypeStruct((32, 16), jnp.float32))
+    r = analyze(txt)
+    assert r["flops"] == pytest.approx(2 * 64 * 32 * 16, rel=1e-6)
+
+
+@pytest.mark.parametrize("iters", [1, 5, 23])
+def test_scan_flops_scaled_by_trip_count(iters):
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, jnp.arange(iters))
+        return out
+    txt = _compile_text(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    r = analyze(txt)
+    expected = 2 * 128**3 * iters
+    assert r["flops"] == pytest.approx(expected, rel=0.05), \
+        (r["flops"], expected)
+
+
+def test_nested_scan_multiplier():
+    def f(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, jnp.arange(3))
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, jnp.arange(4))
+        return out
+    txt = _compile_text(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    r = analyze(txt)
+    expected = 2 * 64**3 * 3 * 4
+    assert r["flops"] == pytest.approx(expected, rel=0.05)
+
+
+def test_hbm_bytes_scale_with_loop():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, jnp.arange(10))
+        return out
+    txt = _compile_text(f, jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                        jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    r = analyze(txt)
+    # each iteration must re-read w (256*256*4 = 262144 B) → ≥ 10×
+    assert r["hbm_bytes"] >= 10 * 262144

@@ -1,0 +1,108 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_ivf, search_numpy, search_jit, pack_ivf, true_neighbors
+from repro.data.vectors import make_manifold
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    ds = make_manifold(jax.random.PRNGKey(0), n=20_000, d=32, nq=50,
+                       intrinsic_dim=8)
+    tn = true_neighbors(ds.X, ds.Q, k=10)
+    return ds, tn
+
+
+@pytest.fixture(scope="module")
+def soar_index(small_ds):
+    ds, _ = small_ds
+    return build_ivf(jax.random.PRNGKey(1), ds.X, 64, spill_mode="soar",
+                     pq_subspaces=8, train_iters=6)
+
+
+def test_csr_validity(soar_index):
+    idx = soar_index
+    assert idx.starts[0] == 0 and idx.starts[-1] == idx.n_assignments
+    assert np.all(np.diff(idx.starts) >= 0)
+    # every point appears exactly twice (primary + spill), distinct partitions
+    counts = np.bincount(idx.point_ids, minlength=idx.n_points)
+    assert np.all(counts == 2)
+    assert np.all(idx.assignments[:, 0] != idx.assignments[:, 1])
+    # point_ids in partition p really are assigned to p
+    for p in (0, 13, 63):
+        seg = idx.point_ids[idx.starts[p]:idx.starts[p + 1]]
+        ok = (idx.assignments[seg] == p).any(axis=1)
+        assert ok.all()
+
+
+def test_full_probe_is_exact(small_ds, soar_index):
+    ds, tn = small_ds
+    ids, stats = search_numpy(soar_index, ds.Q, top_t=64, final_k=10,
+                              rerank_budget=0)
+    rec = (ids[:, :, None] == tn[:, None, :]).any(-1).mean()
+    assert rec == 1.0
+    assert np.all(stats.points_read == soar_index.n_assignments)
+
+
+def test_recall_improves_with_probes(small_ds, soar_index):
+    ds, tn = small_ds
+    recs = []
+    for t in (1, 4, 16):
+        ids, _ = search_numpy(soar_index, ds.Q, top_t=t, final_k=10)
+        recs.append((ids[:, :, None] == tn[:, None, :]).any(-1).mean())
+    assert recs[0] <= recs[1] <= recs[2]
+    assert recs[2] > 0.8
+
+
+def test_no_duplicate_results(small_ds, soar_index):
+    ds, _ = small_ds
+    ids, _ = search_numpy(soar_index, ds.Q, top_t=8, final_k=10,
+                          rerank_budget=100)
+    for row in ids:
+        row = row[row >= 0]
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_pq_path_close_to_exact_path(small_ds, soar_index):
+    ds, tn = small_ds
+    ids_pq, _ = search_numpy(soar_index, ds.Q, top_t=16, final_k=10,
+                             rerank_budget=400)
+    rec_pq = (ids_pq[:, :, None] == tn[:, None, :]).any(-1).mean()
+    ids_ex, _ = search_numpy(soar_index, ds.Q, top_t=16, final_k=10,
+                             rerank_budget=0)
+    rec_ex = (ids_ex[:, :, None] == tn[:, None, :]).any(-1).mean()
+    assert rec_pq >= rec_ex - 0.05
+
+
+def test_jit_path_matches_numpy_path(small_ds, soar_index):
+    ds, tn = small_ds
+    packed = pack_ivf(soar_index)
+    jids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=16, final_k=10,
+                         rerank_budget=512)
+    jids = np.asarray(jids)
+    rec_jit = (jids[:, :, None] == tn[:, None, :]).any(-1).mean()
+    ids_np, _ = search_numpy(soar_index, ds.Q, top_t=16, final_k=10,
+                             rerank_budget=512)
+    rec_np = (ids_np[:, :, None] == tn[:, None, :]).any(-1).mean()
+    assert abs(rec_jit - rec_np) < 0.05
+    assert rec_jit > 0.75
+
+
+def test_memory_model_matches_paper(small_ds, soar_index):
+    """§3.5: spilling adds 4 + d/2s bytes/pt; relative growth ≈ 1/(8s+1)
+    for f32 rerank data."""
+    ds, _ = small_ds
+    none_idx = build_ivf(jax.random.PRNGKey(1), ds.X, 64, spill_mode="none",
+                         pq_subspaces=8, train_iters=3)
+    m_soar = soar_index.memory_bytes(rerank="f32")
+    m_none = none_idx.memory_bytes(rerank="f32")
+    d = ds.X.shape[1]
+    s = d // 8
+    per_pt_extra = 4 + d / (2 * s)
+    expected_growth = per_pt_extra * ds.X.shape[0]
+    got_growth = m_soar["total"] - m_none["total"]
+    assert abs(got_growth - expected_growth) / expected_growth < 1e-6
+    rel = got_growth / m_none["total"]
+    assert abs(rel - 1 / (8 * s + 1)) < 0.03

@@ -1,0 +1,143 @@
+"""Per-kernel allclose validation vs pure-jnp oracles (interpret mode on CPU).
+
+Sweeps shapes/dtypes per the deliverable spec; hypothesis property tests on
+the assignment kernels' invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- pq_score
+@pytest.mark.parametrize("nq,n,m", [
+    (1, 64, 8), (7, 300, 16), (128, 512, 16), (33, 1000, 4), (2, 2048, 32),
+])
+def test_pq_score_matches_ref(nq, n, m):
+    luts = _rand(0, nq, m, 16)
+    codes = jax.random.randint(jax.random.PRNGKey(1), (n, m), 0, 16)
+    got = ops.pq_score(luts, codes)
+    want = ref.pq_score_ref(luts, codes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bq,bn", [(8, 128), (128, 512), (256, 256)])
+def test_pq_score_block_shape_invariance(bq, bn):
+    luts = _rand(2, 17, 8, 16)
+    codes = jax.random.randint(jax.random.PRNGKey(3), (137, 8), 0, 16)
+    got = ops.pq_score(luts, codes, bq=bq, bn=bn)
+    want = ref.pq_score_ref(luts, codes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pq_score_dtype_bf16_lut():
+    luts = _rand(4, 4, 16, 16).astype(jnp.bfloat16).astype(jnp.float32)
+    codes = jax.random.randint(jax.random.PRNGKey(5), (256, 16), 0, 16)
+    got = ops.pq_score(luts, codes)
+    want = ref.pq_score_ref(luts, codes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- vq_assign
+@pytest.mark.parametrize("n,c,d", [
+    (100, 16, 32), (513, 100, 64), (1000, 777, 128), (64, 2000, 100),
+])
+def test_vq_assign_matches_ref(n, c, d):
+    X = _rand(10, n, d)
+    C = _rand(11, c, d)
+    idx, val = ops.vq_assign(X, C)
+    ridx, rval = ref.vq_assign_ref(X, C)
+    # compare chosen distances (ties could differ in index, never in value)
+    np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
+                               rtol=1e-4, atol=1e-4)
+    chosen = jnp.sum((X - C[idx]) ** 2, -1)
+    ref_chosen = jnp.sum((X - C[ridx]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(chosen), np.asarray(ref_chosen),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bn,bc", [(128, 128), (512, 256), (256, 1024)])
+def test_vq_assign_block_invariance(bn, bc):
+    X = _rand(12, 300, 48)
+    C = _rand(13, 500, 48)
+    idx, _ = ops.vq_assign(X, C, bn=bn, bc=bc)
+    ridx, _ = ref.vq_assign_ref(X, C)
+    assert (np.asarray(idx) == np.asarray(ridx)).mean() > 0.999
+
+
+# -------------------------------------------------------------- soar_assign
+@pytest.mark.parametrize("n,c,d,lam", [
+    (200, 64, 32, 1.0), (513, 256, 64, 1.5), (100, 1000, 100, 0.5),
+])
+def test_soar_assign_matches_ref(n, c, d, lam):
+    X = _rand(20, n, d)
+    C = _rand(21, c, d)
+    prim, _ = ref.vq_assign_ref(X, C)
+    r = X - C[prim]
+    rhat = r / jnp.maximum(jnp.linalg.norm(r, -1, keepdims=True), 1e-12)
+    idx, val = ops.soar_assign(X, rhat, prim, C, lam=lam)
+    ridx, rval = ref.soar_assign_ref(X, rhat, prim, C, lam)
+    np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
+                               rtol=1e-4, atol=1e-4)
+    assert not np.any(np.asarray(idx) == np.asarray(prim)), "spill == primary"
+
+
+def test_soar_assign_lam0_is_second_closest():
+    X = _rand(22, 128, 16)
+    C = _rand(23, 64, 16)
+    prim, _ = ref.vq_assign_ref(X, C)
+    rhat = jnp.zeros_like(X).at[:, 0].set(1.0)
+    idx, _ = ops.soar_assign(X, rhat, prim, C, lam=0.0)
+    d2 = (jnp.sum(C * C, -1)[None] - 2 * X @ C.T)
+    d2 = jnp.where(jax.nn.one_hot(prim, 64, dtype=bool), jnp.inf, d2)
+    second = jnp.argmin(d2, -1)
+    assert (np.asarray(idx) == np.asarray(second)).mean() > 0.999
+
+
+# ----------------------------------------------------- hypothesis properties
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 200), c=st.integers(2, 120), d=st.integers(2, 96),
+       seed=st.integers(0, 2**30))
+def test_vq_assign_property(n, c, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    C = jax.random.normal(k2, (c, d))
+    idx, val = ops.vq_assign(X, C)
+    # invariant: reported min distance equals distance to reported centroid,
+    # and is <= distance to every centroid
+    d_all = jnp.sum((X[:, None, :] - C[None, :, :]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(val),
+                               np.asarray(jnp.min(d_all, -1)), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum((X - C[idx]) ** 2, -1)),
+        np.asarray(jnp.min(d_all, -1)), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 100), c=st.integers(3, 80), d=st.integers(2, 64),
+       lam=st.floats(0.0, 4.0), seed=st.integers(0, 2**30))
+def test_soar_assign_property(n, c, d, lam, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    C = jax.random.normal(k2, (c, d))
+    prim, _ = ref.vq_assign_ref(X, C)
+    r = X - C[prim]
+    rhat = r / jnp.maximum(jnp.linalg.norm(r, -1, keepdims=True), 1e-12)
+    idx, val = ops.soar_assign(X, rhat, prim, C, lam=float(lam))
+    # invariant: the kernel's loss is minimal over all non-primary centroids
+    rp = X[:, None, :] - C[None, :, :]
+    loss = jnp.sum(rp * rp, -1) + lam * jnp.einsum("nd,ncd->nc", rhat, rp) ** 2
+    loss = jnp.where(jax.nn.one_hot(prim, c, dtype=bool), jnp.inf, loss)
+    np.testing.assert_allclose(np.asarray(val), np.asarray(jnp.min(loss, -1)),
+                               rtol=1e-3, atol=1e-3)
+    assert not np.any(np.asarray(idx) == np.asarray(prim))

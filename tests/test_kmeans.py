@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import (train_kmeans, kmeans_pp_init, lloyd_step,
+                               assign_euclidean, assign_euclidean_topk)
+
+
+def test_distortion_monotone():
+    X = jax.random.normal(jax.random.PRNGKey(0), (5000, 16))
+    res = train_kmeans(jax.random.PRNGKey(1), X, 32, iters=10)
+    h = res.history
+    assert all(h[i + 1] <= h[i] + 1e-6 for i in range(len(h) - 1)), h
+
+
+def test_assignment_is_argmin():
+    X = jax.random.normal(jax.random.PRNGKey(2), (300, 8))
+    C = jax.random.normal(jax.random.PRNGKey(3), (20, 8))
+    a = assign_euclidean(X, C)
+    brute = jnp.argmin(jnp.sum((X[:, None] - C[None]) ** 2, -1), -1)
+    assert np.array_equal(np.asarray(a), np.asarray(brute))
+
+
+def test_kmeanspp_centers_are_datapoints():
+    X = jax.random.normal(jax.random.PRNGKey(4), (1000, 8))
+    C = kmeans_pp_init(jax.random.PRNGKey(5), X, 16)
+    d = jnp.min(jnp.sum((C[:, None] - X[None]) ** 2, -1), -1)
+    assert float(jnp.max(d)) < 1e-9
+
+
+def test_empty_cluster_keeps_centroid():
+    X = jnp.ones((50, 4))                      # all identical points
+    C = jnp.stack([jnp.ones(4), jnp.full(4, 100.0)])
+    C2, assign, _ = lloyd_step(X, C, 2)
+    assert np.array_equal(np.asarray(assign), np.zeros(50))
+    np.testing.assert_allclose(np.asarray(C2[1]), np.full(4, 100.0))
+
+
+def test_topk_assign_consistent():
+    X = jax.random.normal(jax.random.PRNGKey(6), (200, 8))
+    C = jax.random.normal(jax.random.PRNGKey(7), (30, 8))
+    top2 = assign_euclidean_topk(X, C, 2)
+    assert np.array_equal(np.asarray(top2[:, 0]), np.asarray(assign_euclidean(X, C)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 300), c=st.integers(2, 16), d=st.integers(2, 24),
+       seed=st.integers(0, 1 << 30))
+def test_kmeans_property_distortion_beats_random(n, c, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    res = train_kmeans(k2, X, c, iters=5)
+    rand_C = jax.random.normal(jax.random.fold_in(k2, 9), (c, d))
+    rand_d = float(jnp.mean(jnp.min(jnp.sum((X[:, None] - rand_C[None]) ** 2, -1), -1)))
+    assert float(res.distortion) <= rand_d + 1e-6

@@ -1,0 +1,57 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.core import build_ivf, kmr_curve, points_to_recall, true_neighbors
+from repro.core.kmr import rank_statistics
+from repro.data.vectors import make_manifold
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_manifold(jax.random.PRNGKey(0), n=20_000, d=32, nq=50,
+                       intrinsic_dim=8)
+    tn = true_neighbors(ds.X, ds.Q, k=20)
+    idx_none = build_ivf(jax.random.PRNGKey(1), ds.X, 64, spill_mode="none",
+                         train_iters=6)
+    idx_soar = build_ivf(jax.random.PRNGKey(1), ds.X, 64, spill_mode="soar",
+                         train_iters=6)
+    return ds, tn, idx_none, idx_soar
+
+
+def test_curve_monotone_and_complete(setup):
+    ds, tn, idx_none, idx_soar = setup
+    for idx in (idx_none, idx_soar):
+        cv = kmr_curve(idx, ds.Q, tn, k=20)
+        assert np.all(np.diff(cv.recall_at_t) >= -1e-6)
+        assert abs(cv.recall_at_t[-1] - 1.0) < 1e-6
+        assert abs(cv.points_at_t[-1] - idx.n_assignments) < 1e-3
+        assert np.all(np.diff(cv.points_at_t) >= -1e-3)
+
+
+def test_spilling_dominates_at_fixed_t(setup):
+    """At the same partition count t, a spilled index can only improve
+    rank-based recall (min over two ranks <= primary rank)."""
+    ds, tn, idx_none, idx_soar = setup
+    # identical centroids/primary => comparable rank space
+    assert np.allclose(idx_none.centroids, idx_soar.centroids)
+    cv_n = kmr_curve(idx_none, ds.Q, tn, k=20)
+    cv_s = kmr_curve(idx_soar, ds.Q, tn, k=20)
+    assert np.all(cv_s.recall_at_t >= cv_n.recall_at_t - 1e-6)
+
+
+def test_points_to_recall_interpolation(setup):
+    ds, tn, idx_none, _ = setup
+    cv = kmr_curve(idx_none, ds.Q, tn, k=20)
+    p50 = points_to_recall(cv, 0.5)
+    p90 = points_to_recall(cv, 0.9)
+    assert 0 < p50 <= p90 <= idx_none.n_assignments
+    assert points_to_recall(cv, 1.1) == float("inf")
+
+
+def test_rank_statistics_shapes(setup):
+    ds, tn, _, idx_soar = setup
+    pr, sr = rank_statistics(idx_soar, ds.Q, tn)
+    assert pr.shape == (50, 20) and sr.shape == (50, 20)
+    assert pr.min() >= 0 and pr.max() < 64
+    assert not np.array_equal(pr, sr)

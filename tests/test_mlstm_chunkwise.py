@@ -1,0 +1,72 @@
+"""Chunkwise-parallel mLSTM must match the sequential recurrence exactly
+(it's an algebraic reformulation, not an approximation) — incl. state
+handoff across calls."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (MLSTM_CHUNK, _mlstm_chunkwise,
+                              _mlstm_sequential)
+
+
+def _inputs(key, B, S, H, hd):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * hd ** -0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * hd ** -0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    ig = jax.random.normal(ks[3], (B, S, H)) * 2.0
+    fg = jax.random.normal(ks[4], (B, S, H)) * 2.0 + 1.0
+    return q, k, v, ig, fg
+
+
+@pytest.mark.parametrize("S", [128, 256])
+def test_chunkwise_matches_sequential(S):
+    B, H, hd = 2, 3, 16
+    q, k, v, ig, fg = _inputs(jax.random.PRNGKey(0), B, S, H, hd)
+    C0 = jnp.zeros((B, H, hd, hd))
+    n0 = jnp.zeros((B, H, hd))
+    m0 = jnp.full((B, H), -1e30)
+    h_seq, (C1, n1, m1) = _mlstm_sequential(q, k, v, ig, fg, C0, n0, m0, S)
+    h_chk, (C2, n2, m2) = _mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0, S)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m1), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(C2), np.asarray(C1), rtol=2e-3,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(n2), np.asarray(n1), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_chunkwise_with_nonzero_initial_state():
+    B, H, hd, S = 1, 2, 8, 128
+    q, k, v, ig, fg = _inputs(jax.random.PRNGKey(1), B, S, H, hd)
+    kc = jax.random.split(jax.random.PRNGKey(2), 3)
+    C0 = jax.random.normal(kc[0], (B, H, hd, hd)) * 0.5
+    n0 = jax.random.normal(kc[1], (B, H, hd)) * 0.5
+    m0 = jnp.zeros((B, H))
+    h_seq, _ = _mlstm_sequential(q, k, v, ig, fg, C0, n0, m0, S)
+    h_chk, _ = _mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0, S)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_state_handoff_chunked_to_sequential():
+    """prefill (chunkwise) → decode (sequential single step) consistency."""
+    B, H, hd, S = 1, 2, 8, 128
+    q, k, v, ig, fg = _inputs(jax.random.PRNGKey(3), B, S + 1, H, hd)
+    C0 = jnp.zeros((B, H, hd, hd))
+    n0 = jnp.zeros((B, H, hd))
+    m0 = jnp.full((B, H), -1e30)
+    # full sequential over S+1 steps (can't chunk S+1; use seq as truth)
+    h_all, _ = _mlstm_sequential(q, k, v, ig, fg, C0, n0, m0, S + 1)
+    # chunkwise over first S, then one sequential step
+    sl = lambda t: t[:, :S]
+    _, (C1, n1, m1) = _mlstm_chunkwise(sl(q), sl(k), sl(v), sl(ig), sl(fg),
+                                       C0, n0, m0, S)
+    la = lambda t: t[:, S:]
+    h_last, _ = _mlstm_sequential(la(q), la(k), la(v), la(ig), la(fg),
+                                  C1, n1, m1, 1)
+    np.testing.assert_allclose(np.asarray(h_last[:, 0]),
+                               np.asarray(h_all[:, S]), rtol=2e-4, atol=2e-4)

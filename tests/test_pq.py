@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.pq import (train_pq, pq_encode, pq_decode, pq_lut, pq_score,
+                            pq_score_batch)
+from repro.quant.int8 import int8_quantize, int8_dequantize
+
+
+@pytest.fixture(scope="module")
+def pq_setup():
+    X = jax.random.normal(jax.random.PRNGKey(0), (4000, 32))
+    cb = train_pq(jax.random.PRNGKey(1), X, n_subspaces=8, iters=5)
+    codes = pq_encode(cb, X)
+    return X, cb, codes
+
+
+def test_reconstruction_beats_random_codes(pq_setup):
+    X, cb, codes = pq_setup
+    rec = pq_decode(cb, codes)
+    err = float(jnp.mean(jnp.sum((X - rec) ** 2, -1)))
+    rand_codes = jax.random.randint(jax.random.PRNGKey(2), codes.shape, 0, 16
+                                    ).astype(jnp.uint8)
+    rand_err = float(jnp.mean(jnp.sum((X - pq_decode(cb, rand_codes)) ** 2, -1)))
+    assert err < 0.5 * rand_err
+
+
+def test_lut_score_equals_decoded_dot(pq_setup):
+    X, cb, codes = pq_setup
+    q = jax.random.normal(jax.random.PRNGKey(3), (32,))
+    lut = pq_lut(cb, q)
+    s = pq_score(lut, codes[:100])
+    exact = pq_decode(cb, codes[:100]) @ q
+    np.testing.assert_allclose(np.asarray(s), np.asarray(exact), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_batch_score_matches_single(pq_setup):
+    X, cb, codes = pq_setup
+    Q = jax.random.normal(jax.random.PRNGKey(4), (5, 32))
+    luts = jax.vmap(lambda q: pq_lut(cb, q))(Q)
+    batch = pq_score_batch(luts, codes[:50])
+    for i in range(5):
+        np.testing.assert_allclose(np.asarray(batch[i]),
+                                   np.asarray(pq_score(luts[i], codes[:50])),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_codes_in_range(pq_setup):
+    _, _, codes = pq_setup
+    c = np.asarray(codes)
+    assert c.min() >= 0 and c.max() < 16
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 64), d=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 1 << 30))
+def test_int8_roundtrip_property(n, d, seed):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 3.0
+    q = int8_quantize(X)
+    back = int8_dequantize(q)
+    amax = np.abs(np.asarray(X)).max(axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(X),
+                               atol=float((amax / 127.0).max()) + 1e-6)

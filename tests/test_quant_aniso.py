@@ -1,0 +1,44 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import assign_euclidean, train_kmeans
+from repro.quant.anisotropic import (anisotropic_assign, anisotropic_kmeans,
+                                     anisotropic_loss_values, eta_from_threshold)
+
+
+def test_eta_one_equals_euclidean():
+    X = jax.random.normal(jax.random.PRNGKey(0), (400, 16))
+    C = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    a_iso = anisotropic_assign(X, C, eta=1.0)
+    a_euc = assign_euclidean(X, C)
+    assert np.array_equal(np.asarray(a_iso), np.asarray(a_euc))
+
+
+def test_assign_minimizes_aniso_loss():
+    X = jax.random.normal(jax.random.PRNGKey(2), (200, 8))
+    C = jax.random.normal(jax.random.PRNGKey(3), (25, 8))
+    eta = 4.0
+    a = anisotropic_assign(X, C, eta=eta)
+    chosen = anisotropic_loss_values(X, C, a, eta)
+    for j in range(25):
+        other = anisotropic_loss_values(X, C, jnp.full((200,), j, jnp.int32), eta)
+        assert np.all(np.asarray(chosen) <= np.asarray(other) + 1e-4)
+
+
+def test_aniso_training_beats_euclidean_on_aniso_loss():
+    X = jax.random.normal(jax.random.PRNGKey(4), (5000, 16))
+    X = X / jnp.linalg.norm(X, axis=-1, keepdims=True)
+    eta = eta_from_threshold(0.2, 16)
+    C_a, assign_a = anisotropic_kmeans(jax.random.PRNGKey(5), X, 16, eta, iters=5)
+    km = train_kmeans(jax.random.PRNGKey(5), X, 16, iters=8)
+    loss_a = float(jnp.mean(anisotropic_loss_values(X, C_a, assign_a, eta)))
+    loss_e = float(jnp.mean(anisotropic_loss_values(
+        X, km.centroids, km.assignments, eta)))
+    assert loss_a < loss_e
+
+
+def test_eta_from_threshold_monotone():
+    assert eta_from_threshold(0.0, 100) == 0.0
+    vals = [eta_from_threshold(t, 100) for t in (0.1, 0.2, 0.4)]
+    assert vals[0] < vals[1] < vals[2]

@@ -1,0 +1,137 @@
+"""Validation of the paper's theory: Theorem 3.1, Lemma 3.2, corollaries.
+
+These are the strongest correctness checks available for the SOAR loss: the
+closed form must match a Monte-Carlo evaluation of the defining expectation
+E_q[w(cos θ) <q, r'>^2] over hypersphere-uniform queries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.soar import (soar_assign, soar_assign_multi,
+                             naive_spill_assign, soar_loss_values)
+from repro.core.kmeans import assign_euclidean
+
+
+def _uniform_sphere(key, n, d):
+    q = jax.random.normal(key, (n, d))
+    return q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+
+
+@pytest.mark.parametrize("lam", [0.0, 1.0, 2.0, 4.0])
+def test_theorem_3_1_closed_form(lam):
+    """MC estimate of E[|cosθ|^λ <q,r'>^2] ∝ ||r'||^2 + λ||proj_r r'||^2."""
+    d = 8
+    key = jax.random.PRNGKey(0)
+    kq, kr, kp = jax.random.split(key, 3)
+    r = jax.random.normal(kr, (d,))
+    rhat = r / jnp.linalg.norm(r)
+    q = _uniform_sphere(kq, 400_000, d)
+    cos = q @ rhat
+    w = jnp.abs(cos) ** lam
+    rps = jax.random.normal(kp, (12, d))                     # candidate r' set
+    mc = jnp.mean(w[:, None] * (q @ rps.T) ** 2, axis=0)     # (12,)
+    closed = (jnp.sum(rps * rps, -1) + lam * (rps @ rhat) ** 2)
+    ratio = np.asarray(mc / closed)
+    # proportionality: all ratios equal (up to MC noise)
+    assert ratio.std() / ratio.mean() < 0.02, ratio
+
+
+def test_lemma_3_2_projection_is_scaled_correlation():
+    """||proj_r r'|| == ||r'|| * rho(<q,r>, <q,r'>) over hypersphere q."""
+    d = 16
+    k1, k2, kq = jax.random.split(jax.random.PRNGKey(1), 3)
+    r = jax.random.normal(k1, (d,))
+    rp = jax.random.normal(k2, (d,))
+    q = _uniform_sphere(kq, 400_000, d)
+    a, b = q @ r, q @ rp
+    rho = np.corrcoef(np.asarray(a), np.asarray(b))[0, 1]
+    proj = float(jnp.abs(jnp.dot(r, rp)) / jnp.linalg.norm(r))
+    got = abs(rho) * float(jnp.linalg.norm(rp))
+    assert abs(got - proj) / proj < 0.02, (got, proj)
+
+
+def test_corollary_3_1_1_lam0_equals_euclidean():
+    """λ=0 → standard (second-closest) Euclidean assignment."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    X = jax.random.normal(k1, (500, 24))
+    C = jax.random.normal(k2, (64, 24))
+    prim = assign_euclidean(X, C)
+    s0 = soar_assign(X, C, prim, lam=0.0)
+    nv = naive_spill_assign(X, C, prim)
+    assert np.array_equal(np.asarray(s0), np.asarray(nv))
+    # and it is indeed the 2nd closest centroid
+    d2 = jnp.sum((X[:, None] - C[None]) ** 2, -1)
+    d2 = jnp.where(jax.nn.one_hot(prim, 64, dtype=bool), jnp.inf, d2)
+    assert np.array_equal(np.asarray(s0), np.asarray(jnp.argmin(d2, -1)))
+
+
+def test_soar_assign_is_argmin_of_loss():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    X = jax.random.normal(k1, (200, 16))
+    C = jax.random.normal(k2, (40, 16))
+    prim = assign_euclidean(X, C)
+    sec = soar_assign(X, C, prim, lam=1.5)
+    # brute force: loss at every candidate
+    losses = jnp.stack([soar_loss_values(X, C, prim,
+                                         jnp.full((200,), j, jnp.int32), lam=1.5)
+                        for j in range(40)], axis=1)
+    losses = jnp.where(jax.nn.one_hot(prim, 40, dtype=bool), jnp.inf, losses)
+    best = jnp.min(losses, axis=1)
+    chosen = soar_loss_values(X, C, prim, sec, lam=1.5)
+    np.testing.assert_allclose(np.asarray(chosen), np.asarray(best),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_orthogonality_amplification():
+    """Corollary 3.1.2 in action: SOAR residual pairs are closer to
+    orthogonal than naive-spill residual pairs."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    X = jax.random.normal(k1, (2000, 32))
+    X = X / jnp.linalg.norm(X, axis=-1, keepdims=True)
+    C = jax.random.normal(k2, (100, 32)) * 0.3
+    prim = assign_euclidean(X, C)
+
+    def mean_abs_cos(sec):
+        r = X - C[prim]
+        rp = X - C[sec]
+        cos = (jnp.sum(r * rp, -1)
+               / jnp.maximum(jnp.linalg.norm(r, -1) * jnp.linalg.norm(rp, -1), 1e-9))
+        return float(jnp.mean(jnp.abs(cos)))
+
+    soar_cos = mean_abs_cos(soar_assign(X, C, prim, lam=2.0))
+    naive_cos = mean_abs_cos(naive_spill_assign(X, C, prim))
+    assert soar_cos < naive_cos
+
+
+def test_multi_spill_distinct_assignments():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    X = jax.random.normal(k1, (300, 16))
+    C = jax.random.normal(k2, (50, 16))
+    prim = assign_euclidean(X, C)
+    A = np.asarray(soar_assign_multi(X, C, prim, lam=1.0, n_spills=3))
+    assert A.shape == (300, 4)
+    assert np.array_equal(A[:, 0], np.asarray(prim))
+    for i in range(300):
+        assert len(set(A[i])) == 4, f"duplicate assignment row {i}: {A[i]}"
+
+
+def test_lambda_monotonicity():
+    """Figure 9: higher λ → higher spilled distortion E||r'||^2, lower
+    parallel component."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+    X = jax.random.normal(k1, (3000, 32))
+    X = X / jnp.linalg.norm(X, axis=-1, keepdims=True)
+    C = jax.random.normal(k2, (128, 32)) * 0.3
+    prim = assign_euclidean(X, C)
+    r = X - C[prim]
+    rhat = r / jnp.linalg.norm(r, -1, keepdims=True)
+    dist, par = [], []
+    for lam in (0.0, 1.0, 4.0):
+        sec = soar_assign(X, C, prim, lam=lam)
+        rp = X - C[sec]
+        dist.append(float(jnp.mean(jnp.sum(rp * rp, -1))))
+        par.append(float(jnp.mean(jnp.sum(rhat * rp, -1) ** 2)))
+    assert dist[0] <= dist[1] <= dist[2]
+    assert par[0] >= par[1] >= par[2]

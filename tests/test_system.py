@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests: the paper's headline claims on the benchmark
+dataset, through the full public API (build → KMR → search)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (build_ivf, kmr_curve, points_to_recall, search_numpy,
+                        true_neighbors)
+from repro.core.analysis import angle_correlation, pair_stats, pearson
+from repro.data.vectors import glove_like
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = glove_like(n=100_000, d=100, nq=300, seed=3)
+    tn = true_neighbors(ds.X, ds.Q, k=100)
+    idx = {m: build_ivf(jax.random.PRNGKey(1), ds.X, 500, spill_mode=m,
+                        lam=1.0, train_iters=8, pq_subspaces=25)
+           for m in ("none", "naive", "soar")}
+    return ds, tn, idx
+
+
+def test_headline_soar_beats_naive_everywhere(world):
+    """SOAR dominates naive spilling at every recall target (Table 2)."""
+    ds, tn, idx = world
+    c_soar = kmr_curve(idx["soar"], ds.Q, tn, k=100)
+    c_naive = kmr_curve(idx["naive"], ds.Q, tn, k=100)
+    for t in (0.8, 0.85, 0.9, 0.95):
+        assert points_to_recall(c_soar, t) < points_to_recall(c_naive, t), t
+
+
+def test_headline_soar_beats_no_spill_at_high_recall(world):
+    """At this scale the paper's Glove-1M regime: SOAR reads fewer points
+    than a non-spilled index, with the gain GROWING with the target."""
+    ds, tn, idx = world
+    c_soar = kmr_curve(idx["soar"], ds.Q, tn, k=100)
+    c_none = kmr_curve(idx["none"], ds.Q, tn, k=100)
+    gains = [points_to_recall(c_none, t) / points_to_recall(c_soar, t)
+             for t in (0.85, 0.95)]
+    assert gains[0] > 1.0, gains
+    assert gains[1] > gains[0] * 0.98, gains   # non-decreasing (tolerance)
+
+
+def test_mechanism_angle_decorrelation(world):
+    """Fig 4 vs 7: SOAR reduces cos-angle correlation vs naive spilling."""
+    ds, tn, idx = world
+    st_naive = pair_stats(ds.X, idx["naive"].centroids,
+                          idx["naive"].assignments, ds.Q, tn)
+    st_soar = pair_stats(ds.X, idx["soar"].centroids,
+                         idx["soar"].assignments, ds.Q, tn)
+    assert angle_correlation(st_soar) < angle_correlation(st_naive) - 0.05
+
+
+def test_mechanism_cos_dominates_qr(world):
+    """Fig 2: cos(theta) explains <q,r> far better than ||r||."""
+    ds, tn, idx = world
+    st = pair_stats(ds.X, idx["soar"].centroids, idx["soar"].assignments,
+                    ds.Q, tn)
+    assert pearson(st.qr, st.cos1) > pearson(st.qr, st.rnorm) + 0.3
+
+
+def test_end_to_end_search_quality(world):
+    """Full pipeline (centroids → PQ → dedup → rerank) reaches high recall
+    reading a small fraction of the database."""
+    ds, tn, idx = world
+    ids, stats = search_numpy(idx["soar"], ds.Q, top_t=25, final_k=10,
+                              rerank_budget=400)
+    recall = (ids[:, :, None] == tn[:, None, :10]).any(-1).mean()
+    assert recall > 0.9, recall
+    assert stats.points_read.mean() < 0.12 * idx["soar"].n_assignments
+
+
+def test_memory_overhead_within_paper_bounds(world):
+    """Table 1: SOAR's relative growth is small (<= ~20% for int8)."""
+    _, _, idx = world
+    g_f32 = (idx["soar"].memory_bytes("f32")["total"]
+             / idx["none"].memory_bytes("f32")["total"] - 1)
+    g_int8 = (idx["soar"].memory_bytes("int8")["total"]
+              / idx["none"].memory_bytes("int8")["total"] - 1)
+    assert 0 < g_f32 < 0.10
+    assert 0 < g_int8 < 0.25
