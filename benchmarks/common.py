@@ -48,5 +48,12 @@ class Timer:
         self.us = (time.perf_counter() - self.t0) * 1e6
 
 
+# every emit()ed row is also collected here so run.py can write the
+# consolidated BENCH_search.json artifact (perf trajectory across PRs)
+ROWS = []
+
+
 def emit(name: str, us: float, derived):
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")

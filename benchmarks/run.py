@@ -1,28 +1,37 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only kmr,qps]
+    PYTHONPATH=src python -m benchmarks.run [--only kmr,qps] [--out BENCH_search.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (see each bench module's
-docstring for the paper table/figure it reproduces).
+docstring for the paper table/figure it reproduces) and writes every row to
+a consolidated JSON artifact (default ``BENCH_search.json``) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
-BENCHES = ("kmr", "correlation", "lambda", "scaling", "qps", "memory",
-           "ablation")
+BENCHES = ("search_jit", "kmr", "correlation", "lambda", "scaling", "qps",
+           "memory", "ablation")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--out", default="BENCH_search.json",
+                    help="consolidated JSON output path ('' to disable)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else BENCHES
 
+    from benchmarks import common
+
     print("name,us_per_call,derived")
+    failures = []
     for name in BENCHES:
         if name not in only:
             continue
@@ -32,7 +41,23 @@ def main() -> None:
             print(f"# bench_{name} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness going
+            failures.append(name)
             print(f"bench_{name}_FAILED,0,{type(e).__name__}:{e}")
+
+    if args.out:
+        import jax
+        payload = {
+            "unit": "us_per_call",
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "benches_run": [b for b in BENCHES if b in only],
+            "failed": failures,
+            "rows": common.ROWS,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(common.ROWS)} rows to {args.out}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.ivf import build_ivf
-from repro.core.search import pack_ivf
+from repro.core.search import dedup_topk_window, pack_ivf, window_pq_scores
 from repro.quant.pq import PQCodebook
 
 
@@ -71,7 +71,7 @@ def build_sharded_ivf(key, X: np.ndarray, n_shards: int, n_partitions: int,
         idx = build_ivf(jax.random.fold_in(key, s), Xs, n_partitions,
                         spill_mode=spill_mode, lam=lam,
                         train_iters=train_iters)
-        pk = pack_ivf(idx)
+        pk = pack_ivf(idx, pair_codes=False)
         packed.append(pk)
         pmax = max(pmax, pk.part_ids.shape[1])
     for s, pk in enumerate(packed):
@@ -135,20 +135,16 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         rerank = ivf.rerank[0]
         base = ivf.local_base[0]
 
-        def one(q):
-            sc = C @ q                                     # (c,)
-            _, parts = jax.lax.top_k(sc, top_t)
-            ids = part_ids[parts].reshape(-1)              # local ids
-            valid = ids >= 0
-            scores = rerank[jnp.maximum(ids, 0)] @ q
-            scores = jnp.where(valid, scores, -jnp.inf)
-            # dedup via scatter-max over the local shard
-            dense = jnp.full((rerank.shape[0],), -jnp.inf, scores.dtype)
-            dense = dense.at[jnp.maximum(ids, 0)].max(scores)
-            v, i = jax.lax.top_k(dense, final_k)
-            return (i + base).astype(jnp.int32), v
-
-        ids, vals = jax.vmap(one)(Q)                       # (nq, k) local best
+        # batched: one centroid GEMM, then candidate-local dedup — no
+        # intermediate scales with the shard size (DESIGN.md §3.6)
+        sc = Q @ C.T                                       # (nq, c)
+        _, parts = jax.lax.top_k(sc, top_t)
+        ids = part_ids[parts].reshape(Q.shape[0], -1)      # (nq, t·pmax) local
+        valid = ids >= 0
+        scores = jnp.einsum("qwd,qd->qw", rerank[jnp.maximum(ids, 0)], Q)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        ids, vals = dedup_topk_window(ids, scores, final_k)
+        ids = (ids + base).astype(jnp.int32)               # (nq, k) local best
         # global merge: gather every shard's candidates, re-top-k
         ax = axes[0] if len(axes) == 1 else axes
         all_ids = jax.lax.all_gather(ids, ax, tiled=False)   # (D, nq, k)
@@ -173,11 +169,12 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
                                q_chunk: int = 128):
     """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
 
-    Per shard per query: centroid top-t → score the t·pmax candidates from
-    their uint8 PQ codes via a VMEM-resident LUT (+ the centroid score as
-    the coarse term) → top rerank_k by approximate score → exact rerank of
-    only those from the float data → local top-k → global all_gather merge.
-    Queries are processed in q_chunk blocks (lax.map) to bound the live
+    Per shard per q_chunk tile: batched centroid top-t → PQ-score the
+    gathered t·pmax candidate windows from their uint8 codes (Pallas one-hot
+    MXU kernel on TPU, + the centroid score as the coarse term) →
+    candidate-local dedup-by-max + top rerank_k over the window → exact
+    rerank of only those from the float data → local top-k → global
+    all_gather merge. Tiles stream through lax.map to bound the live
     candidate buffers (baseline peaked at 16 GiB gathering f32 candidates).
     """
     from jax.experimental.shard_map import shard_map
@@ -191,35 +188,29 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
         base = ivf.local_base[0]
         m = pqc.shape[0]
         s = pqc.shape[2]
+        pmax = part_ids.shape[1]
 
-        def one(q):
-            sc = C @ q                                         # (c,)
+        def tile(Qb):                                      # (bq, d)
+            sc = Qb @ C.T                                  # (bq, c)
             psc, parts = jax.lax.top_k(sc, top_t)
-            ids = part_ids[parts].reshape(-1)                  # (t*pmax,)
+            bq = Qb.shape[0]
+            ids = part_ids[parts].reshape(bq, -1)          # (bq, t·pmax)
             valid = ids >= 0
-            codes = part_codes[parts].reshape(ids.shape[0], m)
-            lut = jnp.einsum("ms,mks->mk", q.reshape(m, s), pqc)  # (m,16)
-            approx = jnp.sum(
-                jnp.take_along_axis(lut[None], codes[:, :, None].astype(jnp.int32),
-                                    axis=2)[:, :, 0], axis=-1)
-            approx = approx + jnp.repeat(psc, part_ids.shape[1])
+            codes = part_codes[parts].reshape(bq, top_t * pmax, m)
+            luts = jnp.einsum("qms,mks->qmk", Qb.reshape(bq, m, s), pqc)
+            approx = window_pq_scores(luts, codes)
+            approx = approx + jnp.repeat(psc, pmax, axis=-1)
             approx = jnp.where(valid, approx, -jnp.inf)
-            av, apos = jax.lax.top_k(approx, rerank_k)
-            cand = ids[apos]
-            # dedup within the rerank set (spilled dupes): keep first by id
-            order = jnp.argsort(cand)
-            sorted_ids = cand[order]
-            dup = jnp.concatenate(
-                [jnp.array([False]), sorted_ids[1:] == sorted_ids[:-1]])
-            exact = rerank[jnp.maximum(sorted_ids, 0)] @ q
-            exact = jnp.where(dup | (sorted_ids < 0)
-                              | ~jnp.isfinite(av[order]), -jnp.inf, exact)
+            bi, bv = dedup_topk_window(ids, approx, rerank_k)
+            exact = jnp.einsum("qbd,qd->qb", rerank[jnp.maximum(bi, 0)], Qb)
+            exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
             v, pos = jax.lax.top_k(exact, final_k)
-            return (sorted_ids[pos] + base).astype(jnp.int32), v
+            return (jnp.take_along_axis(bi, pos, axis=-1)
+                    + base).astype(jnp.int32), v
 
         nq = Q.shape[0]
         Qc = Q.reshape(nq // q_chunk, q_chunk, -1)
-        ids, vals = jax.lax.map(lambda qb: jax.vmap(one)(qb), Qc)
+        ids, vals = jax.lax.map(tile, Qc)
         ids = ids.reshape(nq, final_k)
         vals = vals.reshape(nq, final_k)
         ax = axes[0] if len(axes) == 1 else axes
@@ -255,7 +246,7 @@ def build_sharded_ivf_pq(key, X: np.ndarray, n_shards: int, n_partitions: int,
         idx = build_ivf(jax.random.fold_in(key, sh), Xs, n_partitions,
                         spill_mode=spill_mode, lam=lam,
                         pq_subspaces=pq_subspaces, train_iters=train_iters)
-        pk = pack_ivf(idx)
+        pk = pack_ivf(idx, pair_codes=False)
         packed.append((pk, idx))
         pmax = max(pmax, pk.part_ids.shape[1])
     cents, ids, codes, pqcs, sizes, reranks, bases = [], [], [], [], [], [], []

@@ -1,14 +1,22 @@
 """ANN search over a (possibly spilled) IVF index.
 
-Two execution paths:
+Two execution paths, both candidate-local (DESIGN.md §3.6): every per-query
+intermediate is bounded by the probed candidate window (top_t·pmax entries),
+never by the database size n — the property that keeps SOAR's spilled IVF
+sublinear at serving time.
 
 - `search_numpy`: host-orchestrated ragged search (like ScaNN's CPU engine):
-  jit'd centroid scoring, numpy CSR gathers, vectorized PQ LUT scoring,
-  dedup (a point may appear in 2+ searched partitions under spilling),
-  exact rerank. Used by the recall/QPS benchmarks.
+  jit'd centroid scoring, one batch-level CSR gather, vectorized PQ LUT
+  scoring, per-query segment dedup (a point may appear in 2+ searched
+  partitions under spilling), exact rerank. Used by the recall/QPS benchmarks.
 
 - `search_jit`: fixed-budget, fully-jit pipeline (padded partitions) — the
   TPU-target path the Pallas kernels and the distributed serving engine use.
+  Batched centroid GEMM + top-t, gathered candidate windows, PQ LUT scoring
+  through the one-hot MXU Pallas kernel on TPU (jnp gather fallback
+  elsewhere), sort-based dedup-by-max over the window, exact rerank.
+  `search_jit_batched` streams large query batches through `bq`-sized tiles
+  so live buffers stay bounded regardless of nq.
 """
 from __future__ import annotations
 
@@ -28,63 +36,93 @@ class SearchStats(NamedTuple):
     unique_candidates: np.ndarray
 
 
+def _ragged_gather(starts: np.ndarray, top_parts: np.ndarray):
+    """Batch-level CSR gather: one flat index vector for every (query,
+    partition) segment in the batch.
+
+    Returns (cand_rows, qidx, seg_part, row_lens): flat CSR row of each
+    candidate, its query, its source partition, and per-query totals.
+    """
+    nq, t = top_parts.shape
+    seg_starts = starts[top_parts].ravel()                       # (nq*t,)
+    seg_lens = (starts[top_parts + 1] - starts[top_parts]).ravel()
+    offs = np.concatenate([[0], np.cumsum(seg_lens)])
+    total = int(offs[-1])
+    ar = np.arange(total, dtype=np.int64)
+    cand_rows = ar - np.repeat(offs[:-1], seg_lens) + np.repeat(seg_starts,
+                                                                seg_lens)
+    row_lens = seg_lens.reshape(nq, t).sum(axis=1)
+    qidx = np.repeat(np.arange(nq, dtype=np.int64), row_lens)
+    seg_part = np.repeat(top_parts.ravel(), seg_lens)
+    return cand_rows, qidx, seg_part, row_lens
+
+
+def _group_ranks(group: np.ndarray, n_groups: int) -> np.ndarray:
+    """Rank of each element within its (sorted, contiguous) group."""
+    starts = np.searchsorted(group, np.arange(n_groups))
+    return np.arange(len(group)) - starts[group]
+
+
 def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
                  final_k: int = 10, rerank_budget: int = 0):
     """Returns (ids (nq, final_k), SearchStats). rerank_budget=0 → exact
-    scoring of all candidates (no PQ stage)."""
+    scoring of all candidates (no PQ stage).
+
+    Fully vectorized over the batch: one ragged CSR gather, one LUT gather,
+    and `np.lexsort`-based per-query segment dedup — no per-query Python loop.
+    """
     Q = np.asarray(Q, np.float32)
+    nq = Q.shape[0]
     C = index.centroids
     scores_c = Q @ C.T                                   # (nq, c)
     top_parts = np.argpartition(-scores_c, top_t - 1, axis=1)[:, :top_t]
-    # order the selected partitions by score (needed for correct LUT offsets)
-    row = np.arange(Q.shape[0])[:, None]
+    # order the selected partitions by score (stable probe order)
+    row = np.arange(nq)[:, None]
     ordsel = np.argsort(-scores_c[row, top_parts], axis=1)
     top_parts = top_parts[row, ordsel]
 
-    starts, pids = index.starts, index.point_ids
     use_pq = index.codes is not None and rerank_budget > 0
     data = index.rerank_f32
     if data is None:
         from repro.quant.int8 import int8_dequantize
         data = np.asarray(int8_dequantize(index.rerank_int8))
 
-    out = np.zeros((Q.shape[0], final_k), np.int32)
-    points_read = np.zeros(Q.shape[0], np.int64)
-    uniq = np.zeros(Q.shape[0], np.int64)
-    luts = None
+    cand_rows, qidx, seg_part, row_lens = _ragged_gather(index.starts,
+                                                         top_parts)
+    cand_ids = index.point_ids[cand_rows].astype(np.int64)
+    # composite (query, id) key: one dedup pass for the whole batch
+    key = qidx * np.int64(index.n_points) + cand_ids
+
     if use_pq:
-        luts = np.asarray(jax.vmap(lambda q: pq_lut(index.pq, q))(jnp.asarray(Q)))
+        luts = np.asarray(
+            jax.vmap(lambda q: pq_lut(index.pq, q))(jnp.asarray(Q)))
+        codes = index.codes[cand_rows]                    # (total, m)
+        m = codes.shape[1]
+        approx = luts[qidx[:, None], np.arange(m)[None, :],
+                      codes].sum(axis=1)
+        approx = approx + scores_c[qidx, seg_part]        # + <q, centroid>
+        # dedup: keep best approx score per (query, id)
+        order = np.lexsort((-approx, key))
+        key_s = key[order]
+        keep = np.ones(len(order), bool)
+        keep[1:] = key_s[1:] != key_s[:-1]
+        sel = order[keep]
+        # per-query budget truncation by approx (descending)
+        sel = sel[np.lexsort((-approx[sel], qidx[sel]))]
+        sel = sel[_group_ranks(qidx[sel], nq) < rerank_budget]
+    else:
+        sel = np.unique(key, return_index=True)[1]        # first per (q, id)
 
-    for qi in range(Q.shape[0]):
-        parts = top_parts[qi]
-        segs = [np.arange(starts[p], starts[p + 1]) for p in parts]
-        seg_part = np.concatenate(
-            [np.full(len(s), p, np.int32) for s, p in zip(segs, parts)])
-        cand_rows = np.concatenate(segs).astype(np.int64)
-        cand_ids = pids[cand_rows]
-        points_read[qi] = len(cand_ids)
-
-        if use_pq:
-            codes = index.codes[cand_rows]               # (cand, m)
-            lut = luts[qi]                                # (m, 16)
-            approx = lut[np.arange(lut.shape[0])[None, :], codes].sum(axis=1)
-            approx = approx + scores_c[qi, seg_part]      # + <q, centroid>
-            # dedup: keep best approx score per point id
-            order = np.argsort(-approx, kind="stable")
-            ids_sorted = cand_ids[order]
-            first = np.unique(ids_sorted, return_index=True)[1]
-            dedup_ids = ids_sorted[np.sort(first)][:rerank_budget]
-        else:
-            dedup_ids = np.unique(cand_ids)
-        uniq[qi] = len(dedup_ids)
-        exact = data[dedup_ids] @ Q[qi]
-        k = min(final_k, len(dedup_ids))
-        top = np.argpartition(-exact, k - 1)[:k] if len(dedup_ids) > k else np.arange(len(dedup_ids))
-        top = top[np.argsort(-exact[top])]
-        out[qi, :k] = dedup_ids[top]
-        if k < final_k:
-            out[qi, k:] = -1
-    return out, SearchStats(points_read, uniq)
+    qs, ids_sel = qidx[sel], cand_ids[sel]
+    uniq = np.bincount(qs, minlength=nq).astype(np.int64)
+    exact = np.einsum("ij,ij->i", data[ids_sel], Q[qs])
+    order = np.lexsort((-exact, qs))
+    qs, ids_sel = qs[order], ids_sel[order]
+    rank = _group_ranks(qs, nq)
+    top = rank < final_k
+    out = np.full((nq, final_k), -1, np.int32)
+    out[qs[top], rank[top]] = ids_sel[top]
+    return out, SearchStats(row_lens, uniq)
 
 
 # --------------------------------------------------------------------------
@@ -94,31 +132,76 @@ def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
 class PackedIVF(NamedTuple):
     """Dense, padded IVF layout for the jit path.
 
-    part_ids:   (c, pmax) int32 point ids, -1 padded
-    part_codes: (c, pmax, m) uint8 PQ codes (zeros where padded)
-    sizes:      (c,) int32
+    part_ids:    (c, pmax) int32 point ids, -1 padded
+    part_codes:  (c, pmax, m) uint8 PQ codes (zeros where padded)
+    part_codes2: (c, pmax, ceil(m/2)) int16/int32 pre-offset PAIR-merged
+                 codes (ScaNN-style LUT merging, DESIGN.md §3.6): entry j
+                 is codes[2j]·16 + codes[2j+1] + j·256 (+ a single-subspace
+                 tail when m is odd), directly indexable into the merged
+                 per-query LUT — halves the gather count of CPU scoring
+    sizes:       (c,) int32
     """
     centroids: jax.Array
     part_ids: jax.Array
     part_codes: Optional[jax.Array]
+    part_codes2: Optional[jax.Array]
     sizes: jax.Array
     pq: Optional[PQCodebook]
     rerank: jax.Array           # (n, d) f32
 
 
-def pack_ivf(index: IVFIndex, pmax: Optional[int] = None) -> PackedIVF:
+def _paired_codes(codes: np.ndarray, n_centers: int = 16) -> np.ndarray:
+    """(..., m) uint8 → (..., ceil(m/2)) pre-offset pair-merged codes."""
+    m = codes.shape[-1]
+    npairs, rem = divmod(m, 2)
+    kk = n_centers * n_centers
+    c32 = codes.astype(np.int32)
+    out = c32[..., 0:2 * npairs:2] * n_centers + c32[..., 1:2 * npairs:2]
+    out = out + np.arange(npairs, dtype=np.int32) * kk
+    if rem:
+        out = np.concatenate([out, c32[..., -1:] + npairs * kk], axis=-1)
+    dt = np.int16 if npairs * kk + n_centers < 2 ** 15 else np.int32
+    return out.astype(dt)
+
+
+def _merged_luts(luts):
+    """(nq, m, 16) per-subspace LUTs → (nq, npairs·256 [+16]) merged pair
+    LUTs matching `_paired_codes` offsets. The merge is a tiny outer sum
+    (nq·(m/2)·256 adds) that halves the per-candidate gather count."""
+    nq, m, k = luts.shape
+    npairs, rem = divmod(m, 2)
+    l2 = luts[:, 0:2 * npairs:2, :, None] + luts[:, 1:2 * npairs:2, None, :]
+    l2 = l2.reshape(nq, npairs * k * k)
+    if rem:
+        l2 = jnp.concatenate([l2, luts[:, -1, :]], axis=-1)
+    return l2
+
+
+def pack_ivf(index: IVFIndex, pmax: Optional[int] = None,
+             pair_codes: Optional[bool] = None) -> PackedIVF:
+    """Pack an IVFIndex into the dense jit layout.
+
+    pair_codes: build the CPU pair-merged code table (part_codes2). Default
+    (None) auto-detects — it is only read by the non-TPU scoring path, so
+    TPU backends skip the host pass and the extra device allocation.
+    Callers that only consume the raw arrays (e.g. the sharded builders)
+    pass False explicitly.
+    """
+    if pair_codes is None:
+        pair_codes = jax.default_backend() != "tpu"
     c = index.n_partitions
     sizes = index.partition_sizes()
     pmax = int(pmax or sizes.max())
     m = index.codes.shape[1] if index.codes is not None else 0
     ids = np.full((c, pmax), -1, np.int32)
     codes = np.zeros((c, pmax, m), np.uint8) if m else None
-    for p in range(c):
-        s, e = index.starts[p], index.starts[p + 1]
-        ln = min(e - s, pmax)
-        ids[p, :ln] = index.point_ids[s:s + ln]
-        if m:
-            codes[p, :ln] = index.codes[s:s + ln]
+    # vectorized CSR → padded scatter (no per-partition Python loop)
+    part = np.repeat(np.arange(c), sizes)                # (n_assign,)
+    pos = np.arange(index.n_assignments) - np.repeat(index.starts[:-1], sizes)
+    keep = pos < pmax
+    ids[part[keep], pos[keep]] = index.point_ids[keep]
+    if m:
+        codes[part[keep], pos[keep]] = index.codes[keep]
     data = index.rerank_f32
     if data is None:
         from repro.quant.int8 import int8_dequantize
@@ -126,45 +209,139 @@ def pack_ivf(index: IVFIndex, pmax: Optional[int] = None) -> PackedIVF:
     return PackedIVF(
         jnp.asarray(index.centroids), jnp.asarray(ids),
         jnp.asarray(codes) if codes is not None else None,
+        (jnp.asarray(_paired_codes(codes))
+         if codes is not None and pair_codes else None),
         jnp.asarray(np.minimum(sizes, pmax).astype(np.int32)),
         index.pq, jnp.asarray(data))
 
 
-@functools.partial(jax.jit, static_argnames=("top_t", "final_k", "rerank_budget"))
+def window_pq_scores(luts, codes):
+    """(nq, m, 16) LUTs × (nq, cand, m) candidate-window codes → (nq, cand).
+
+    Routes through the one-hot MXU Pallas kernel on TPU. Elsewhere: flat
+    per-query LUT gather — indexing the (nq, m·16) LUT with precomputed
+    flat offsets keeps the gather operand tiny, where the naive
+    `take_along_axis(luts[:, None], ...)` form (kernels/ref.py) broadcasts
+    the LUT to (nq, cand, m, 16) — gigabytes at serving shapes.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ops import pq_score_window
+        return pq_score_window(luts, codes)
+    nq, cand, m = codes.shape
+    lutflat = luts.reshape(nq, m * luts.shape[-1])
+    idx = codes.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32) * luts.shape[-1]
+    g = jnp.take_along_axis(lutflat, idx.reshape(nq, cand * m), axis=-1)
+    return g.reshape(nq, cand, m).sum(axis=-1)
+
+
+def dedup_topk_window(ids, scores, k: int, multiplicity: int = 2):
+    """Candidate-local dedup-by-max + top-k, batched over leading axes.
+
+    Two stages, both window-local (nothing ever scales with the database):
+
+    1. cheap `top_k` of the raw window down to multiplicity·k entries — a
+       point occupies at most `multiplicity` window slots (primary + spills),
+       so the raw top multiplicity·k provably contains every copy that could
+       reach the deduped top-k, and in particular each survivor's max;
+    2. lexicographic sort of that small set by (id asc, score desc) so the
+       first slot of every run of equal ids carries that id's best score;
+       the rest (and -1 padding) mask to -inf before the final top-k.
+
+    Stage 1 exists because XLA:CPU's variadic sort is ~10x slower than
+    top_k at window width; the split leaves the expensive sort on O(k)
+    elements. Pass multiplicity ≥ 1 + n_spills for multi-spill indexes
+    (default 2 covers "naive"/"soar" single-spill).
+
+    Returns (ids (..., k) int32, scores (..., k)); k is clamped to the
+    window length.
+    """
+    raw = min(multiplicity * k, ids.shape[-1])
+    if raw < ids.shape[-1]:
+        scores, pos = jax.lax.top_k(scores, raw)
+        ids = jnp.take_along_axis(ids, pos, axis=-1)
+    ids_s, neg_s = jax.lax.sort((ids, -scores), num_keys=2)
+    scores_s = -neg_s
+    first = jnp.concatenate(
+        [jnp.ones_like(ids_s[..., :1], dtype=bool),
+         ids_s[..., 1:] != ids_s[..., :-1]], axis=-1)
+    scores_s = jnp.where(first & (ids_s >= 0), scores_s, -jnp.inf)
+    k = min(k, ids.shape[-1])
+    v, pos = jax.lax.top_k(scores_s, k)
+    return jnp.take_along_axis(ids_s, pos, axis=-1).astype(jnp.int32), v
+
+
+def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
+                  rerank_budget: int, multiplicity: int = 2):
+    """Candidate-local search body shared by search_jit / search_jit_batched.
+
+    All per-query work is O(top_t·pmax): centroid scoring is one batched
+    GEMM, candidate gather/scoring/dedup operate on the (nq, t·pmax) window.
+    """
+    scores_c = Q @ packed.centroids.T                  # (nq, c) one GEMM
+    psc, parts = jax.lax.top_k(scores_c, top_t)        # (nq, t)
+    ids = packed.part_ids[parts]                       # (nq, t, pmax)
+    nq, t, pmax = ids.shape
+    ids = ids.reshape(nq, t * pmax)
+    valid = ids >= 0
+    if packed.part_codes is None:
+        # no PQ stage → exact-score the whole window (search_numpy's
+        # rerank_budget=0 semantics); rerank_budget is ignored
+        exact = jnp.einsum("qwd,qd->qw",
+                           packed.rerank[jnp.maximum(ids, 0)], Q)
+        exact = jnp.where(valid, exact, -jnp.inf)
+        return dedup_topk_window(ids, exact, final_k, multiplicity)
+    luts = jax.vmap(lambda q: pq_lut(packed.pq, q))(Q)         # (nq, m, 16)
+    if jax.default_backend() != "tpu" and packed.part_codes2 is not None:
+        # CPU: pair-merged LUT gather (half the lookups of per-subspace)
+        idx = packed.part_codes2[parts].reshape(nq, -1).astype(jnp.int32)
+        g = jnp.take_along_axis(_merged_luts(luts), idx, axis=-1)
+        approx = g.reshape(nq, t * pmax, -1).sum(axis=-1)
+    else:
+        # TPU one-hot MXU kernel, or raw-code fallback (pair_codes=False)
+        codes = packed.part_codes[parts].reshape(nq, t * pmax, -1)
+        approx = window_pq_scores(luts, codes)
+    approx = approx + jnp.repeat(psc, pmax, axis=-1)           # + <q, centroid>
+    approx = jnp.where(valid, approx, -jnp.inf)
+    bi, bv = dedup_topk_window(ids, approx, rerank_budget, multiplicity)
+    exact = jnp.einsum("qbd,qd->qb", packed.rerank[jnp.maximum(bi, 0)], Q)
+    exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
+    fv, fpos = jax.lax.top_k(exact, final_k)
+    return jnp.take_along_axis(bi, fpos, axis=-1), fv
+
+
+@functools.partial(jax.jit, static_argnames=("top_t", "final_k",
+                                              "rerank_budget", "multiplicity"))
 def search_jit(packed: PackedIVF, Q, top_t: int, final_k: int,
-               rerank_budget: int = 256):
+               rerank_budget: int = 256, multiplicity: int = 2):
     """Fully-jit batched search. Returns (ids, scores) of shape (nq, final_k).
 
-    Pipeline per query: centroid MIPS top-t → gather padded partitions →
-    PQ LUT scoring (+ centroid offset) → dedup-by-max via scatter-max →
-    top rerank_budget → exact rerank → top final_k.
+    Pipeline: batched centroid MIPS top-t → gather per-query candidate
+    windows → PQ LUT scoring (+ centroid offset; Pallas one-hot MXU kernel
+    on TPU) → sort-based dedup-by-max over the window → top rerank_budget →
+    exact rerank → top final_k. No intermediate scales with n.
     """
-    C, ids_all, codes_all = packed.centroids, packed.part_ids, packed.part_codes
-    n = packed.rerank.shape[0]
+    return _search_block(packed, Q, top_t, final_k, rerank_budget,
+                         multiplicity)
 
-    def one(q):
-        sc = C @ q                                         # (c,)
-        psc, parts = jax.lax.top_k(sc, top_t)
-        ids = ids_all[parts].reshape(-1)                   # (t*pmax,)
-        valid = ids >= 0
-        if codes_all is not None:
-            lut = pq_lut(packed.pq, q)                     # (m, 16)
-            codes = codes_all[parts].reshape(ids.shape[0], -1)
-            approx = jnp.sum(
-                jnp.take_along_axis(lut[None], codes[:, :, None].astype(jnp.int32),
-                                    axis=2)[:, :, 0], axis=-1)
-            approx = approx + jnp.repeat(psc, ids_all.shape[1])
-        else:
-            approx = jnp.repeat(psc, ids_all.shape[1])
-        approx = jnp.where(valid, approx, -jnp.inf)
-        # dedup: scatter-max into a dense per-point buffer
-        dense = jnp.full((n,), -jnp.inf, approx.dtype)
-        dense = dense.at[jnp.where(valid, ids, n - 1)].max(
-            jnp.where(valid, approx, -jnp.inf))
-        bv, bi = jax.lax.top_k(dense, rerank_budget)
-        exact = packed.rerank[bi] @ q
-        exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
-        fv, fpos = jax.lax.top_k(exact, final_k)
-        return bi[fpos].astype(jnp.int32), fv
 
-    return jax.vmap(one)(Q)
+@functools.partial(jax.jit,
+                   static_argnames=("top_t", "final_k", "rerank_budget", "bq",
+                                    "multiplicity"))
+def search_jit_batched(packed: PackedIVF, Q, top_t: int, final_k: int,
+                       rerank_budget: int = 256, bq: int = 128,
+                       multiplicity: int = 2):
+    """`search_jit` streamed over bq-query tiles via lax.map.
+
+    Live buffers are O(bq·top_t·pmax) regardless of nq — the driver for
+    large offline batches and the serving engine's bulk path, where a flat
+    vmap over nq would blow VMEM/HBM.
+    """
+    nq, d = Q.shape
+    pad = (-nq) % bq
+    Qp = jnp.pad(Q, ((0, pad), (0, 0))) if pad else Q
+    tiles = Qp.reshape(-1, bq, d)
+    ids, vals = jax.lax.map(
+        lambda qb: _search_block(packed, qb, top_t, final_k, rerank_budget,
+                                 multiplicity), tiles)
+    k = ids.shape[-1]
+    return ids.reshape(-1, k)[:nq], vals.reshape(-1, k)[:nq]

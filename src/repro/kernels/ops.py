@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.pq_score import pq_score_pallas
+from repro.kernels.pq_score import pq_score_pallas, pq_score_window_pallas
 from repro.kernels.vq_assign import vq_assign_pallas
 from repro.kernels.soar_assign import soar_assign_pallas
 
@@ -20,6 +20,12 @@ def _interpret() -> bool:
 def pq_score(luts, codes, **kw):
     """Batched PQ LUT scoring: (nq, m, 16) × (n, m) → (nq, n)."""
     return pq_score_pallas(luts, codes, interpret=_interpret(), **kw)
+
+
+def pq_score_window(luts, codes, **kw):
+    """Per-query candidate-window scoring: (nq, m, 16) × (nq, cand, m) →
+    (nq, cand) — the candidate-local search_jit hot path."""
+    return pq_score_window_pallas(luts, codes, interpret=_interpret(), **kw)
 
 
 def vq_assign(X, C, **kw):

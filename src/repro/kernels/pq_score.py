@@ -1,21 +1,35 @@
-"""Pallas TPU kernel: batched PQ LUT scoring as a one-hot MXU contraction.
+"""Pallas TPU kernels: batched PQ LUT scoring as a one-hot MXU contraction.
 
 TPU adaptation of ScaNN's AVX2 LUT16 (DESIGN.md §3): instead of in-register
 shuffles, codes are expanded to one-hot IN VMEM and contracted against the
 per-query LUTs on the MXU. The LUT block stays VMEM-resident across the whole
 point dimension; HBM traffic is one streaming read of the (packed) codes.
 
-score[q, i] = sum_m luts[q, m, codes[i, m]]
-            = luts[q].reshape(m*16) · onehot(codes[i]).reshape(m*16)
+Two variants:
+
+- `pq_score_pallas`: shared code matrix — every query scores every point.
+      score[q, i] = sum_m luts[q, m, codes[i, m]]
+                  = luts[q].reshape(m*16) · onehot(codes[i]).reshape(m*16)
+
+- `pq_score_window_pallas`: per-query candidate windows — query q scores only
+  ITS OWN gathered candidates (the t·pmax window the IVF search probes), the
+  shape the candidate-local `search_jit` pipeline produces (DESIGN.md §3.6).
+      score[q, i] = sum_m luts[q, m, codes[q, i, m]]
+  The contraction is a per-query batched matvec on the MXU: each grid cell
+  holds BQ LUT rows and BQ×BN code rows and contracts them batch-wise.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 # Block sizes: BQ queries × BN points per grid cell. m*16 is the contraction
 # dim (m=16 subspaces → 256, MXU-aligned). VMEM footprint per cell:
@@ -23,6 +37,18 @@ from jax.experimental.pallas import tpu as pltpu
 #   ≈ 128·256·4 + 512·16·4 + 512·256·4 + 128·512·4 ≈ 0.9 MB  « 16 MB VMEM.
 DEFAULT_BQ = 128
 DEFAULT_BN = 512
+
+# Window variant: the one-hot block is BQ×BN×(m·16), so BQ stays small.
+#   8·512·256·4B ≈ 4 MB one-hot + 8·512·16·4B codes + 8·256·4B luts « 16 MB.
+DEFAULT_WIN_BQ = 8
+DEFAULT_WIN_BN = 512
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None → auto-detect: compile to Mosaic on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _pq_score_kernel(lut_ref, codes_ref, out_ref, *, n_centers: int):
@@ -39,8 +65,13 @@ def _pq_score_kernel(lut_ref, codes_ref, out_ref, *, n_centers: int):
 @functools.partial(jax.jit, static_argnames=("n_centers", "bq", "bn", "interpret"))
 def pq_score_pallas(luts, codes, n_centers: int = 16,
                     bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
-                    interpret: bool = True):
-    """luts (nq, m, 16) f32, codes (n, m) int32 → (nq, n) f32 scores."""
+                    interpret: Optional[bool] = None):
+    """luts (nq, m, 16) f32, codes (n, m) int32 → (nq, n) f32 scores.
+
+    interpret=None auto-detects the backend (Mosaic on TPU, interpret mode
+    elsewhere) — pass an explicit bool only to force one mode.
+    """
+    interpret = _resolve_interpret(interpret)
     nq, m, k = luts.shape
     n = codes.shape[0]
     assert k == n_centers
@@ -61,8 +92,59 @@ def pq_score_pallas(luts, codes, n_centers: int = 16,
         out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(
             (lutmat.shape[0], codes_p.shape[0]), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(lutmat, codes_p)
     return out[:nq, :n]
+
+
+def _pq_score_window_kernel(lut_ref, codes_ref, out_ref, *, n_centers: int):
+    codes = codes_ref[...]                                   # (BQ, BN, m) int32
+    onehot = (codes[:, :, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, n_centers), 3))
+    onehot = onehot.astype(jnp.float32).reshape(
+        codes.shape[0], codes.shape[1], -1)                  # (BQ, BN, m*16)
+    lut = lut_ref[...]                                       # (BQ, m*16)
+    # batched matvec: out[b, i] = lut[b, :] · onehot[b, i, :]
+    out_ref[...] = jax.lax.dot_general(
+        lut, onehot, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                  # (BQ, BN)
+
+
+@functools.partial(jax.jit, static_argnames=("n_centers", "bq", "bn", "interpret"))
+def pq_score_window_pallas(luts, codes, n_centers: int = 16,
+                           bq: int = DEFAULT_WIN_BQ, bn: int = DEFAULT_WIN_BN,
+                           interpret: Optional[bool] = None):
+    """luts (nq, m, 16) f32, codes (nq, cand, m) int → (nq, cand) f32 scores.
+
+    Per-query candidate-window scoring: row q of `codes` is query q's own
+    gathered candidate window (already in partition-probe order). This is the
+    hot-path shape of the candidate-local `search_jit` pipeline.
+    """
+    interpret = _resolve_interpret(interpret)
+    nq, m, k = luts.shape
+    assert k == n_centers
+    assert codes.shape[0] == nq and codes.shape[2] == m, (luts.shape, codes.shape)
+    cand = codes.shape[1]
+    lutmat = luts.reshape(nq, m * k)
+    qpad = (-nq) % bq
+    npad = (-cand) % bn
+    lutmat = jnp.pad(lutmat, ((0, qpad), (0, 0)))
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, qpad), (0, npad), (0, 0)))
+    grid = (lutmat.shape[0] // bq, codes_p.shape[1] // bn)
+    out = pl.pallas_call(
+        functools.partial(_pq_score_window_kernel, n_centers=n_centers),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, m * k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bn, m), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (lutmat.shape[0], codes_p.shape[1]), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(lutmat, codes_p)
+    return out[:nq, :cand]

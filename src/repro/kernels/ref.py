@@ -16,6 +16,18 @@ def pq_score_ref(luts, codes):
     return jnp.sum(gathered[..., 0], axis=-1)
 
 
+def pq_score_window_ref(luts, codes):
+    """luts (nq, m, 16) f32, codes (nq, cand, m) int → scores (nq, cand).
+
+    Per-query candidate-window scoring (the candidate-local search_jit hot
+    path): score[q, i] = sum_m luts[q, m, codes[q, i, m]].
+    """
+    gathered = jnp.take_along_axis(
+        luts[:, None, :, :],                                  # (nq, 1, m, 16)
+        codes.astype(jnp.int32)[..., None], axis=3)           # (nq, cand, m, 1)
+    return jnp.sum(gathered[..., 0], axis=-1)
+
+
 def vq_assign_ref(X, C):
     """Nearest centroid by squared L2. Returns (idx (n,), sqdist (n,))."""
     d2 = (jnp.sum(C * C, -1)[None, :] - 2.0 * (X @ C.T)

@@ -29,7 +29,8 @@ from repro.core.distributed import (abstract_sharded_ivf,  # noqa: E402
 from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: E402
                                  fmt_summary)
 from repro.launch.hlo_analysis import analyze  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import (make_production_mesh, set_mesh,  # noqa: E402
+                               to_shardings)
 
 N_LOCAL = 1_000_000
 C_LOCAL = 2_500
@@ -58,9 +59,10 @@ def run(multi_pod: bool, pq: bool = False) -> dict:
                                          final_k=FINAL_K)
         in_sh = (sharded_ivf_pspecs(axes), P())
     t0 = time.time()
-    with jax.set_mesh(mesh):
-        lowered = jax.jit(search, in_shardings=in_sh,
-                          out_shardings=(P(), P())).lower(ivf, q)
+    with set_mesh(mesh):
+        lowered = jax.jit(search, in_shardings=to_shardings(mesh, in_sh),
+                          out_shardings=to_shardings(mesh, (P(), P()))
+                          ).lower(ivf, q)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
     an = analyze(compiled.as_text())

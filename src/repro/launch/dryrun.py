@@ -20,7 +20,8 @@ import jax               # noqa: E402
 import numpy as np       # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config, get_rule_overrides  # noqa: E402
-from repro.launch.mesh import build_rules, make_production_mesh     # noqa: E402
+from repro.launch.mesh import (build_rules, make_production_mesh,  # noqa: E402
+                               set_mesh, to_shardings)
 from repro.launch import specs as S                                 # noqa: E402
 from repro.launch.hlo_analysis import analyze                       # noqa: E402
 from repro.models.config import SHAPES, cell_applicable             # noqa: E402
@@ -67,8 +68,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         donate = (2,)           # KV cache updated in place
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
-        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+    with set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=to_shardings(mesh, in_sh),
+                          out_shardings=to_shardings(mesh, out_sh),
                           donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()

@@ -11,6 +11,28 @@ import numpy as np
 import jax
 
 
+def set_mesh(mesh):
+    """Activate `mesh` as the ambient mesh for the following block.
+
+    jax.set_mesh on current jax; on jax<0.5 (no set_mesh) the Mesh object
+    itself is the context manager that installs the global mesh.
+    """
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def to_shardings(mesh, tree):
+    """PartitionSpec pytree → NamedSharding pytree.
+
+    jax<0.5's jit rejects bare PartitionSpecs in in_shardings/out_shardings;
+    NamedSharding works on every version. is_leaf guard: PartitionSpec is a
+    tuple subclass, so tree.map would otherwise flatten into it.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, x) if isinstance(x, PartitionSpec) else x,
+        tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -15,7 +15,8 @@ from repro.configs import ARCH_IDS, get_config, get_rule_overrides  # noqa: E402
 from repro.launch import specs as S                                 # noqa: E402
 from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS          # noqa: E402
 from repro.launch.hlo_analysis import analyze                       # noqa: E402
-from repro.launch.mesh import build_rules, make_production_mesh     # noqa: E402
+from repro.launch.mesh import (build_rules, make_production_mesh,  # noqa: E402
+                               set_mesh, to_shardings)
 from repro.models.config import SHAPES                              # noqa: E402
 from repro.models.layers import set_logical_rules                   # noqa: E402
 
@@ -38,8 +39,9 @@ def profile(arch: str, shape: str, multi_pod: bool = False, top_n: int = 12):
     else:
         fn, args, insh, outsh = S.decode_cell_specs(cfg, cell, rules)
         donate = (2,)
-    with jax.set_mesh(mesh):
-        compiled = jax.jit(fn, in_shardings=insh, out_shardings=outsh,
+    with set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=to_shardings(mesh, insh),
+                           out_shardings=to_shardings(mesh, outsh),
                            donate_argnums=donate).lower(*args).compile()
         mem = compiled.memory_analysis()
     r = analyze(compiled.as_text(), top_n=top_n)

@@ -22,7 +22,7 @@ import jax
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_IDS, get_config, get_rule_overrides
 from repro.data.pipeline import for_model
-from repro.launch.mesh import build_rules, make_production_mesh
+from repro.launch.mesh import build_rules, make_production_mesh, set_mesh
 from repro.models.layers import set_logical_rules
 from repro.train.train_loop import train
 
@@ -57,7 +57,7 @@ def main():
         if args.no_fsdp:
             rules["embed"] = None
         set_logical_rules(rules)
-        ctx = jax.set_mesh(mesh)
+        ctx = set_mesh(mesh)
 
     # XLA flags a real run would set for collective/compute overlap
     os.environ.setdefault(

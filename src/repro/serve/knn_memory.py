@@ -15,7 +15,7 @@ quality (attention-output error vs exact attention).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -23,30 +23,50 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ivf import build_ivf, IVFIndex
-from repro.core.search import search_numpy
+from repro.core.search import (PackedIVF, pack_ivf, search_jit_batched,
+                               search_numpy)
 
 
 @dataclass
 class KNNMemory:
-    """Per-(layer, head) SOAR index over cached keys."""
+    """Per-(layer, head) SOAR index over cached keys.
+
+    `engine` picks the retrieval path: "numpy" (host-orchestrated ragged
+    engine) or "jit" (the candidate-local fixed-budget pipeline, streamed in
+    bq-tiles — the TPU-target path; see DESIGN.md §3.6). Both dedup spilled
+    candidates window-locally, so retrieval cost never scales with the
+    number of cached keys beyond the probed partitions.
+    """
     index: IVFIndex
     keys: np.ndarray      # (n, hd)
     values: np.ndarray    # (n, hd)
+    engine: str = "numpy"
+    _packed: Optional[PackedIVF] = field(default=None, repr=False)
 
     @classmethod
     def build(cls, keys: np.ndarray, values: np.ndarray,
               n_partitions: Optional[int] = None, lam: float = 1.0,
-              spill_mode: str = "soar", seed: int = 0):
+              spill_mode: str = "soar", seed: int = 0,
+              engine: str = "numpy"):
         n = keys.shape[0]
         c = n_partitions or max(4, n // 256)
         idx = build_ivf(jax.random.PRNGKey(seed), keys, c,
                         spill_mode=spill_mode, lam=lam, train_iters=6)
         return cls(idx, np.asarray(keys, np.float32),
-                   np.asarray(values, np.float32))
+                   np.asarray(values, np.float32), engine=engine)
 
     def retrieve(self, q: np.ndarray, k: int = 32, top_t: int = 4):
         """q: (nq, hd) queries → (ids (nq,k), keys, values)."""
-        ids, _ = search_numpy(self.index, q, top_t=top_t, final_k=k)
+        if self.engine == "jit":
+            if self._packed is None:
+                self._packed = pack_ivf(self.index)
+            jids, _ = search_jit_batched(
+                self._packed, jnp.asarray(q, jnp.float32), top_t=top_t,
+                final_k=k, rerank_budget=max(4 * k, 64),
+                bq=min(128, max(1, q.shape[0])))
+            ids = np.asarray(jids)
+        else:
+            ids, _ = search_numpy(self.index, q, top_t=top_t, final_k=k)
         return ids, self.keys[ids], self.values[ids]
 
     def attend(self, q: np.ndarray, k: int = 32, top_t: int = 4):

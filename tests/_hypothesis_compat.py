@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim: the seed suite hard-imported `hypothesis` at
+module scope, so a container without it failed at COLLECTION and ran zero
+tests. Importing `given`/`settings`/`st` from here keeps every non-property
+test runnable; when hypothesis is missing, property tests become stubs that
+call `pytest.importorskip("hypothesis")` and skip cleanly.
+
+Install the real thing with: pip install -r requirements-dev.txt
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.importorskip("hypothesis")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Stand-in: strategy constructors are only evaluated inside @given
+        argument lists, whose values are never used once the test skips."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -8,6 +8,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.distributed import build_sharded_ivf, make_distributed_search
+from repro.launch.mesh import set_mesh
 from repro.core import true_neighbors
 from repro.data.vectors import make_manifold
 
@@ -17,7 +18,7 @@ mesh = jax.make_mesh((8,), ("data",))
 sharded = build_sharded_ivf(jax.random.PRNGKey(1), ds.X, n_shards=8,
                             n_partitions=16, spill_mode="soar", train_iters=5)
 search = make_distributed_search(mesh, ("data",), top_t=8, final_k=10)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ids, scores = jax.jit(search)(sharded, jnp.asarray(ds.Q))
 ids = np.asarray(ids)
 rec = (ids[:, :, None] == tn[:, None, :]).any(-1).mean()
@@ -56,7 +57,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
 from repro.data.pipeline import for_model
-from repro.launch.mesh import build_rules
+from repro.launch.mesh import build_rules, set_mesh
 from repro.models.layers import set_logical_rules
 from repro.models import transformer as T
 from repro.train import optimizer as opt
@@ -71,7 +72,7 @@ pipe = for_model(cfg, seq_len=32, global_batch=8)
 params = T.init_params(jax.random.PRNGKey(0), cfg)
 lr_fn = opt.warmup_cosine(1e-3, 5, 100)
 step = make_train_step(cfg, lr_fn, accum=2)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     pspec = T.param_pspecs(cfg, rules)
     params = jax.device_put(params, jax.tree.map(
         lambda s: jax.NamedSharding(mesh, s), pspec))
@@ -96,7 +97,10 @@ print("OK", loss, ref)
 
 def _run(script):
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                       # force CPU: the image ships libtpu, and
+                                       # probing it burns 60s+ per subprocess
+                                       "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
     assert "OK" in r.stdout
 
@@ -106,6 +110,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.distributed import build_sharded_ivf_pq, make_distributed_search_pq
+from repro.launch.mesh import set_mesh
 from repro.core import true_neighbors
 from repro.data.vectors import make_manifold
 
@@ -117,7 +122,7 @@ sharded = build_sharded_ivf_pq(jax.random.PRNGKey(1), ds.X, n_shards=8,
                                spill_mode="soar", train_iters=5)
 search = make_distributed_search_pq(mesh, ("data",), top_t=8, final_k=10,
                                     rerank_k=128, q_chunk=32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ids, scores = jax.jit(search)(sharded, jnp.asarray(ds.Q))
 ids = np.asarray(ids)
 rec = (ids[:, :, None] == tn[:, None, :]).any(-1).mean()

@@ -10,7 +10,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
-from repro.launch.mesh import build_rules
+from repro.launch.mesh import build_rules, set_mesh, to_shardings
 from repro.launch import specs as S
 from repro.launch.hlo_analysis import analyze
 from repro.models.config import ShapeCell
@@ -29,8 +29,9 @@ set_logical_rules(rules)
 # --- train step
 cell = ShapeCell("tiny_train", 64, 8, "train")
 fn, args, insh, outsh = S.train_cell_specs(cfg, cell, rules, False)
-with jax.set_mesh(mesh):
-    compiled = jax.jit(fn, in_shardings=insh, out_shardings=outsh,
+with set_mesh(mesh):
+    compiled = jax.jit(fn, in_shardings=to_shardings(mesh, insh),
+                       out_shardings=to_shardings(mesh, outsh),
                        donate_argnums=(0, 1)).lower(*args).compile()
     mem = compiled.memory_analysis()
 r = analyze(compiled.as_text())
@@ -42,8 +43,9 @@ print("train ok: flops", r["flops"])
 # --- decode step
 cell = ShapeCell("tiny_decode", 64, 8, "decode")
 fn, args, insh, outsh = S.decode_cell_specs(cfg, cell, rules)
-with jax.set_mesh(mesh):
-    compiled = jax.jit(fn, in_shardings=insh, out_shardings=outsh,
+with set_mesh(mesh):
+    compiled = jax.jit(fn, in_shardings=to_shardings(mesh, insh),
+                       out_shardings=to_shardings(mesh, outsh),
                        donate_argnums=(2,)).lower(*args).compile()
 r = analyze(compiled.as_text())
 assert r["flops"] > 0
@@ -55,6 +57,7 @@ print("OK")
 def test_small_mesh_dryrun_path():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
     assert "OK" in r.stdout

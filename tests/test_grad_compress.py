@@ -63,7 +63,8 @@ print("OK")
 
 def test_compressed_psum_multidevice():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
 

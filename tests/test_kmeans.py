@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.kmeans import (train_kmeans, kmeans_pp_init, lloyd_step,
                                assign_euclidean, assign_euclidean_topk)

@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.quant.pq import (train_pq, pq_encode, pq_decode, pq_lut, pq_score,
                             pq_score_batch)

@@ -1,0 +1,134 @@
+"""Candidate-local search pipeline regression tests (ISSUE 2 tentpole).
+
+Pins two properties the rewrite must preserve forever:
+
+1. Cross-engine agreement: `search_jit` and `search_numpy` return IDENTICAL
+   top-k ids/scores on a spilled index (duplicates guaranteed by SOAR's
+   2-way assignment), fixing the dedup-by-max semantics.
+
+2. Candidate-locality: no per-query intermediate in the jit pipeline is
+   O(n) — asserted structurally on the jaxpr (no (n,)- or (nq, n)-shaped
+   equation outputs, i.e. no dense scatter buffer and no full-database
+   top_k).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_ivf, search_numpy, search_jit, pack_ivf
+from repro.core.search import dedup_topk_window, search_jit_batched
+from repro.data.vectors import make_manifold
+
+N, D, NQ = 8_000, 32, 37
+TOP_T, FINAL_K = 12, 10
+
+
+@pytest.fixture(scope="module")
+def spilled():
+    ds = make_manifold(jax.random.PRNGKey(0), n=N, d=D, nq=NQ,
+                       intrinsic_dim=8)
+    idx = build_ivf(jax.random.PRNGKey(1), ds.X, 32, spill_mode="soar",
+                    pq_subspaces=8, train_iters=5)
+    return ds, idx, pack_ivf(idx)
+
+
+def test_spill_guarantees_duplicates(spilled):
+    """Precondition for the dedup test to be meaningful: every point sits in
+    two partitions, so probed windows DO contain duplicate ids."""
+    ds, idx, packed = spilled
+    counts = np.bincount(idx.point_ids, minlength=idx.n_points)
+    assert np.all(counts == 2)
+
+
+def test_engines_identical_ids_and_scores(spilled):
+    """With a budget covering the whole window, both engines reduce to
+    exact-rerank of the deduped candidate set → identical output."""
+    ds, idx, packed = spilled
+    window = TOP_T * packed.part_ids.shape[1]
+    jids, jvals = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                             final_k=FINAL_K, rerank_budget=window)
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=window)
+    jids, jvals = np.asarray(jids), np.asarray(jvals)
+    assert np.array_equal(jids, nids), (
+        f"engines disagree on {np.mean(jids != nids):.1%} of slots")
+    # scores must be the exact inner products of the returned ids
+    expect = np.einsum("qkd,qd->qk", ds.X[jids], ds.Q.astype(np.float32))
+    np.testing.assert_allclose(jvals, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_engines_agree_under_budget_truncation(spilled):
+    """A tight budget exercises the approx-ordered truncation in both
+    engines; ids may legitimately differ on approx-score ties, so compare
+    recall of the sets rather than slot-exact ids."""
+    ds, idx, packed = spilled
+    jids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K, rerank_budget=128)
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=128)
+    jids = np.asarray(jids)
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / FINAL_K
+        for a, b in zip(jids, nids)])
+    assert overlap > 0.97, overlap
+
+
+def test_batched_driver_matches_flat(spilled):
+    ds, idx, packed = spilled
+    flat = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                      final_k=FINAL_K, rerank_budget=256)
+    tiled = search_jit_batched(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                               final_k=FINAL_K, rerank_budget=256, bq=8)
+    assert np.array_equal(np.asarray(flat[0]), np.asarray(tiled[0]))
+    np.testing.assert_allclose(np.asarray(flat[1]), np.asarray(tiled[1]))
+
+
+def test_dedup_topk_window_keeps_max_per_id():
+    ids = jnp.asarray([[3, 1, 3, -1, 1, 7]])
+    scores = jnp.asarray([[1.0, 5.0, 4.0, 99.0, 2.0, 0.5]])
+    out_ids, out_scores = dedup_topk_window(ids, scores, 3)
+    assert out_ids.tolist() == [[1, 3, 7]]
+    assert out_scores.tolist() == [[5.0, 4.0, 0.5]]
+
+
+def _jaxpr_shapes(jaxpr):
+    """All equation-output shapes in a (closed) jaxpr, recursively."""
+    out = []
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v.aval, "shape"):
+                out.append(tuple(v.aval.shape))
+        for p in eqn.params.values():
+            inner = getattr(p, "jaxpr", None)
+            if inner is not None:
+                out.extend(_jaxpr_shapes(inner))
+    return out
+
+
+def test_no_database_sized_intermediates(spilled):
+    """ISSUE 2 acceptance: no (n,)- or (nq, n)-shaped buffer anywhere in the
+    traced pipeline — the dense scatter-max dedup and full-database top_k of
+    the seed implementation must never come back."""
+    ds, idx, packed = spilled
+    n = idx.n_points
+    closed = jax.make_jaxpr(
+        lambda p, q: search_jit(p, q, top_t=TOP_T, final_k=FINAL_K,
+                                rerank_budget=256))(packed,
+                                                    jnp.asarray(ds.Q))
+    bad = [s for s in _jaxpr_shapes(closed.jaxpr)
+           if s == (n,) or (len(s) == 2 and s[1] == n)]
+    assert not bad, f"database-sized intermediates in search_jit: {bad}"
+
+
+def test_no_database_sized_intermediates_hlo(spilled):
+    """Belt-and-braces: the lowered HLO text contains no 1-D f32[n] buffer
+    (the seed's dense dedup allocated exactly that per query)."""
+    ds, idx, packed = spilled
+    n = idx.n_points
+    hlo = jax.jit(
+        lambda p, q: search_jit(p, q, top_t=TOP_T, final_k=FINAL_K,
+                                rerank_budget=256)
+    ).lower(packed, jnp.asarray(ds.Q)).as_text()
+    assert f"f32[{n}]" not in hlo
+    assert f"f32[{NQ},{n}]" not in hlo
