@@ -107,20 +107,29 @@ def run(n: int, nq: int, c: int, top_t: int, rerank_budget: int,
     return speedup, r_new, r_seed
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, out: str = ""):
+    from benchmarks import common
+    mark = len(common.ROWS)
     if smoke:
         run(n=10_000, nq=32, c=64, top_t=6, rerank_budget=256,
             train_iters=3, label="smoke")
-        return
-    speedup, r_new, r_seed = run(n=100_000, nq=256, c=500, top_t=10,
-                                 rerank_budget=300, train_iters=8,
-                                 label="100k")
-    assert speedup >= 3.0, f"speedup {speedup:.2f}x < 3x acceptance bar"
-    assert abs(r_new - r_seed) <= 0.002, (r_new, r_seed)
+    else:
+        speedup, r_new, r_seed = run(n=100_000, nq=256, c=500, top_t=10,
+                                     rerank_budget=300, train_iters=8,
+                                     label="100k")
+        assert speedup >= 3.0, f"speedup {speedup:.2f}x < 3x acceptance bar"
+        assert abs(r_new - r_seed) <= 0.002, (r_new, r_seed)
+    if out:
+        from benchmarks.common import write_rows
+        write_rows(out, common.ROWS[mark:], smoke=smoke)
+        print(f"# wrote {len(common.ROWS) - mark} rows to {out}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down CI shape (n=10k, nq=32)")
+    ap.add_argument("--out", default="",
+                    help="standalone JSON artifact path (for the CI "
+                         "regression gate)")
     main(**vars(ap.parse_args()))

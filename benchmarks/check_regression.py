@@ -1,0 +1,123 @@
+"""CI regression gate: hold the recall/latency line against a committed
+baseline.
+
+Compares a freshly generated bench artifact (rows of
+``{name, us_per_call, derived}``) against a baseline JSON committed under
+``benchmarks/baselines/``:
+
+- **recall**: any ``recall@10=X`` value parsed from a row's derived string
+  may not drop more than ``--recall-tol`` (default 0.005) below baseline;
+- **latency**: a row's ``us_per_call`` may not exceed baseline by more
+  than ``--latency-tol`` (default 1.25, i.e. a 25% regression budget).
+  When ``--normalize-by ROW`` names a calibration row present in both
+  runs (the benches emit fixed-shape GEMM / reference-implementation
+  rows), all latencies are divided by it first, so the committed baseline
+  transfers across machines of different speeds;
+- **coverage**: a baseline row missing from the current run fails — a
+  bench silently dropping a measurement must not pass the gate.
+
+Exit code 1 on any failure. Regenerate baselines intentionally with:
+
+    PYTHONPATH=src python -m benchmarks.bench_search_jit --smoke \
+        --out benchmarks/baselines/BENCH_search.smoke.json
+    PYTHONPATH=src python -m benchmarks.bench_build --smoke \
+        --out benchmarks/baselines/BENCH_build.smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+RECALL_RE = re.compile(r"recall@10=([0-9.]+)")
+
+
+def _load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def _recall_of(row) -> float | None:
+    m = RECALL_RE.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def check(current: dict, baseline: dict, *, latency_tol: float,
+          recall_tol: float, normalize_by: str | None):
+    failures, notes = [], []
+    scale = 1.0
+    if normalize_by:
+        cur_n = current.get(normalize_by)
+        base_n = baseline.get(normalize_by)
+        if cur_n and base_n and cur_n["us_per_call"] > 0:
+            # machine-speed ratio: >1 means this machine is slower than
+            # the one that produced the baseline
+            scale = cur_n["us_per_call"] / base_n["us_per_call"]
+            notes.append(f"normalized by {normalize_by}: "
+                         f"machine scale {scale:.2f}x")
+        else:
+            failures.append(f"normalization row '{normalize_by}' missing "
+                            f"or unusable in current/baseline")
+    for name, brow in baseline.items():
+        crow = current.get(name)
+        if crow is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        b_rec, c_rec = _recall_of(brow), _recall_of(crow)
+        if b_rec is not None:
+            if c_rec is None:
+                failures.append(f"{name}: baseline has recall@10 but "
+                                f"current row does not")
+            elif c_rec < b_rec - recall_tol:
+                failures.append(f"{name}: recall@10 {c_rec:.4f} < baseline "
+                                f"{b_rec:.4f} - {recall_tol}")
+            else:
+                notes.append(f"{name}: recall@10 {c_rec:.4f} "
+                             f"(baseline {b_rec:.4f}) ok")
+        if name == normalize_by:
+            continue
+        b_us, c_us = brow["us_per_call"], crow["us_per_call"]
+        if b_us <= 0 or c_us <= 0:
+            continue                       # recall-only / failure rows
+        ratio = (c_us / scale) / b_us
+        if ratio > latency_tol:
+            failures.append(f"{name}: latency {c_us:.1f}us is {ratio:.2f}x "
+                            f"baseline {b_us:.1f}us (tol {latency_tol}x, "
+                            f"machine scale {scale:.2f}x)")
+        else:
+            notes.append(f"{name}: latency ratio {ratio:.2f}x ok")
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--latency-tol", type=float, default=1.25,
+                    help="max allowed current/baseline latency ratio")
+    ap.add_argument("--recall-tol", type=float, default=0.005,
+                    help="max allowed recall@10 drop vs baseline")
+    ap.add_argument("--normalize-by", default=None,
+                    help="calibration row name for cross-machine "
+                         "latency normalization")
+    args = ap.parse_args()
+    failures, notes = check(
+        _load_rows(args.current), _load_rows(args.baseline),
+        latency_tol=args.latency_tol, recall_tol=args.recall_tol,
+        normalize_by=args.normalize_by)
+    for n in notes:
+        print(f"  ok: {n}")
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({args.current} "
+              f"vs {args.baseline}):", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"regression gate passed: {args.current} vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

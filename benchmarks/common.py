@@ -57,3 +57,18 @@ def emit(name: str, us: float, derived):
     ROWS.append({"name": name, "us_per_call": round(float(us), 1),
                  "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_rows(path: str, rows, **meta):
+    """Write a standalone bench artifact (the per-bench JSON files the CI
+    regression gate consumes; run.py separately writes the consolidated
+    artifact from ROWS)."""
+    import json
+    import platform
+
+    import jax
+
+    payload = {"unit": "us_per_call", "backend": jax.default_backend(),
+               "platform": platform.platform(), **meta, "rows": list(rows)}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)

@@ -10,13 +10,11 @@ trajectory is tracked across PRs.
 from __future__ import annotations
 
 import argparse
-import json
-import platform
 import sys
 import time
 
-BENCHES = ("search_jit", "kmr", "correlation", "lambda", "scaling", "qps",
-           "memory", "ablation")
+BENCHES = ("search_jit", "build", "kmr", "correlation", "lambda", "scaling",
+           "qps", "memory", "ablation")
 
 
 def main() -> None:
@@ -45,17 +43,9 @@ def main() -> None:
             print(f"bench_{name}_FAILED,0,{type(e).__name__}:{e}")
 
     if args.out:
-        import jax
-        payload = {
-            "unit": "us_per_call",
-            "backend": jax.default_backend(),
-            "platform": platform.platform(),
-            "benches_run": [b for b in BENCHES if b in only],
-            "failed": failures,
-            "rows": common.ROWS,
-        }
-        with open(args.out, "w") as f:
-            json.dump(payload, f, indent=2)
+        common.write_rows(args.out, common.ROWS,
+                          benches_run=[b for b in BENCHES if b in only],
+                          failed=failures)
         print(f"# wrote {len(common.ROWS)} rows to {args.out}",
               file=sys.stderr)
 

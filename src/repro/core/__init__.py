@@ -3,7 +3,10 @@ IVF index construction, search, and KMR metrics — the paper's contribution."""
 from repro.core.kmeans import train_kmeans, assign_euclidean, assign_euclidean_topk  # noqa: F401
 from repro.core.soar import (soar_assign, soar_assign_multi,  # noqa: F401
                              naive_spill_assign, soar_loss_values)
-from repro.core.ivf import IVFIndex, build_ivf  # noqa: F401
+from repro.core.ivf import IVFIndex, build_ivf, finalize_ivf  # noqa: F401
+from repro.core.build import (build_ivf_sharded, train_codebook,  # noqa: F401
+                              assign_shards)
+from repro.core.mutable import MutableIVF  # noqa: F401
 from repro.core.search import search_numpy, search_jit, pack_ivf  # noqa: F401
 from repro.core.kmr import (kmr_curve, points_to_recall, true_neighbors,  # noqa: F401
                             rank_statistics, KMRCurve)

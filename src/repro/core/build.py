@@ -1,0 +1,145 @@
+"""Sharded SOAR index build: sample-trained codebook + streamed assignment
+(DESIGN.md §3.7).
+
+The monolithic `build_ivf` runs Lloyd iterations over the full dataset and
+materializes every per-point intermediate at O(n) on the accelerator; at
+SPANN/big-ann scale the *build* — not search — is what dies first. This
+driver follows the paper's serving lineage (ScaNN trains partitions on a
+subsample; SPANN's contribution is almost entirely build/partition
+plumbing):
+
+1. the VQ codebook is trained on a `train_sample` row-subsample — k-means
+   quality saturates long before n, and a frozen codebook is what makes
+   incremental inserts possible at all (core/mutable.py);
+2. primary + SOAR assignments stream over `shard_size` row-tiles of X
+   through the fused path in `kernels/soar_assign.py` (Pallas two-MXU-pass
+   kernel on TPU, chunked two-GEMM `lax.map` tiles elsewhere — both share
+   the reassociated loss form of core/soar.py), so peak accelerator memory
+   is O(shard_size·(c + d)) however large n grows;
+3. CSR / residual-PQ / rerank assembly goes through the shared
+   `finalize_ivf`, which also streams residual encoding.
+
+`codebook=` / `pq=` freeze those stages explicitly — the rebuild-comparator
+contract the incremental-mutation equivalence tests pin.
+
+Multi-host: `distributed.make_sharded_assign` wraps the same fused
+assignment in shard_map over the data axis (assignment against a replicated
+frozen codebook is embarrassingly parallel — no collectives), and
+`distributed.build_sharded_ivf*` route their per-shard builds through
+`build_ivf_sharded`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import IVFIndex, finalize_ivf
+from repro.core.kmeans import train_kmeans
+from repro.kernels.soar_assign import assign_fused
+from repro.quant.pq import PQCodebook
+from repro.quant.anisotropic import anisotropic_kmeans, eta_from_threshold
+
+DEFAULT_TRAIN_SAMPLE = 131_072
+DEFAULT_SHARD = 65_536
+
+
+def spill_plan(spill_mode: str, lam: float, n_spills: int):
+    """Canonical (effective lam, effective spill count) per spill mode."""
+    if spill_mode == "none":
+        return 0.0, 0
+    if spill_mode == "naive":
+        return 0.0, 1
+    if spill_mode == "soar":
+        return lam, n_spills
+    raise ValueError(spill_mode)
+
+
+def train_codebook(key, X, n_partitions: int, *,
+                   train_sample: Optional[int] = DEFAULT_TRAIN_SAMPLE,
+                   train_iters: int = 15, anisotropic_T: float = 0.0,
+                   verbose: bool = False) -> np.ndarray:
+    """Train the (to-be-frozen) VQ codebook on a row-subsample of X.
+
+    With anisotropic_T > 0 the codebook is score-aware (quant/anisotropic);
+    note the sharded pipeline always assigns primaries by Euclidean argmin,
+    so anisotropic *training* shapes the centroids only.
+    """
+    n, d = X.shape
+    if train_sample and n > train_sample:
+        sel = np.asarray(jax.random.choice(key, n, (train_sample,),
+                                           replace=False))
+        Xt = jnp.asarray(X[sel], jnp.float32)
+    else:
+        Xt = jnp.asarray(X, jnp.float32)
+    if anisotropic_T > 0.0:
+        eta = eta_from_threshold(anisotropic_T, d)
+        C, _ = anisotropic_kmeans(key, Xt, n_partitions, eta,
+                                  iters=max(4, train_iters // 3))
+    else:
+        C = train_kmeans(key, Xt, n_partitions, iters=train_iters,
+                         verbose=verbose).centroids
+    return np.asarray(C, np.float32)
+
+
+def assign_shards(X, C, *, spill_mode: str = "soar", lam: float = 1.0,
+                  n_spills: int = 1, shard_size: int = DEFAULT_SHARD,
+                  chunk: int = 8192, verbose: bool = False) -> np.ndarray:
+    """Stream fused primary+spill assignment over row-shards of X.
+
+    The host loop moves one `shard_size` tile at a time to the accelerator;
+    inside each shard `assign_fused` tiles further via `lax.map` chunks —
+    the loss matrix never exists beyond (chunk, c). Returns the (n, a)
+    int32 assignment matrix (host memory, 4·a bytes/point).
+    """
+    X = np.asarray(X, np.float32)
+    eff_lam, eff_spills = spill_plan(spill_mode, lam, n_spills)
+    n = X.shape[0]
+    out = np.empty((n, 1 + eff_spills), np.int32)
+    Cd = jnp.asarray(C, jnp.float32)
+    for i0 in range(0, n, shard_size):
+        blk = jnp.asarray(X[i0:i0 + shard_size])
+        out[i0:i0 + blk.shape[0]] = np.asarray(
+            assign_fused(blk, Cd, lam=eff_lam, n_spills=eff_spills,
+                         chunk=chunk))
+        if verbose:
+            print(f"assign shard [{i0}:{i0 + blk.shape[0]}] / {n}")
+    return out
+
+
+def build_ivf_sharded(key, X, n_partitions: int, *, spill_mode: str = "soar",
+                      lam: float = 1.0, n_spills: int = 1,
+                      pq_subspaces: int = 0, rerank: str = "f32",
+                      train_iters: int = 15,
+                      train_sample: Optional[int] = DEFAULT_TRAIN_SAMPLE,
+                      shard_size: int = DEFAULT_SHARD, chunk: int = 8192,
+                      anisotropic_T: float = 0.0,
+                      codebook: Optional[np.ndarray] = None,
+                      pq: Optional[PQCodebook] = None,
+                      verbose: bool = False) -> IVFIndex:
+    """Scalable build: sample-trained codebook, streamed assignment shards.
+
+    Drop-in replacement for `build_ivf` whose accelerator peak is
+    O(max(train_sample, shard_size)) instead of O(n). With
+    `train_sample=None` (codebook trained on all of X) the result is
+    bitwise-identical to `build_ivf` — pinned by tests/test_build.py.
+
+    `codebook=` (and optionally `pq=`) skip training and build against the
+    given FROZEN stages — the path used for mutation-equivalence rebuilds
+    and for re-indexing fresh data into an existing serving configuration.
+    """
+    X = np.asarray(X, np.float32)
+    kkm, kpq = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    if codebook is None:
+        C = train_codebook(kkm, X, n_partitions, train_sample=train_sample,
+                           train_iters=train_iters,
+                           anisotropic_T=anisotropic_T, verbose=verbose)
+    else:
+        C = np.asarray(codebook, np.float32)
+    assignments = assign_shards(X, C, spill_mode=spill_mode, lam=lam,
+                                n_spills=n_spills, shard_size=shard_size,
+                                chunk=chunk, verbose=verbose)
+    return finalize_ivf(kpq, X, C, assignments, pq_subspaces=pq_subspaces,
+                        rerank=rerank, spill_mode=spill_mode, lam=lam, pq=pq)

@@ -28,8 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.ivf import build_ivf
-from repro.core.search import dedup_topk_window, pack_ivf, window_pq_scores
+from repro.core.build import build_ivf_sharded, spill_plan
+from repro.core.search import (_pad_topk, dedup_topk_window, pack_ivf,
+                               window_pq_scores)
+from repro.kernels.soar_assign import assign_fused
 from repro.quant.pq import PQCodebook
 
 
@@ -56,36 +58,100 @@ class ShardedIVFPQ(NamedTuple):
     local_base: jax.Array    # (D,) int32
 
 
-def build_sharded_ivf(key, X: np.ndarray, n_shards: int, n_partitions: int,
-                      spill_mode: str = "soar", lam: float = 1.0,
-                      train_iters: int = 8) -> ShardedIVF:
-    """Host-side build: split X row-wise, build one spilled IVF per shard."""
-    n = X.shape[0]
-    assert n % n_shards == 0
-    nl = n // n_shards
+def _resolve_shard(idx):
+    """Accept IVFIndex or MutableIVF (post-mutation) per shard."""
+    from repro.core.mutable import MutableIVF
+    return idx.to_ivf_index() if isinstance(idx, MutableIVF) else idx
+
+
+def _stack_shards(indexes):
+    """Shared stacker for the ShardedIVF(PQ) builders/refreshers: resolve
+    mutable shards, pack, pad ids to the common pmax envelope (-1
+    sentinel) and rerank to the max local id space (zero rows — padded
+    ids never appear in any partition slot, so they are unreachable), and
+    accumulate cumulative global-id base offsets. Returns
+    (packed, resolved, ids, cents, sizes, reranks, bases)."""
+    resolved = list(map(_resolve_shard, indexes))
+    packed = [pack_ivf(idx, pair_codes=False) for idx in resolved]
+    n_locals = [idx.n_points for idx in resolved]
+    pmax = max(pk.part_ids.shape[1] for pk in packed)
+    nmax = max(n_locals)
     cents, ids, sizes, reranks, bases = [], [], [], [], []
-    pmax = 0
-    packed = []
-    for s in range(n_shards):
-        Xs = X[s * nl:(s + 1) * nl]
-        idx = build_ivf(jax.random.fold_in(key, s), Xs, n_partitions,
-                        spill_mode=spill_mode, lam=lam,
-                        train_iters=train_iters)
-        pk = pack_ivf(idx, pair_codes=False)
-        packed.append(pk)
-        pmax = max(pmax, pk.part_ids.shape[1])
-    for s, pk in enumerate(packed):
+    base = 0
+    for pk, nl in zip(packed, n_locals):
         pad = pmax - pk.part_ids.shape[1]
         ids.append(np.pad(np.asarray(pk.part_ids), ((0, 0), (0, pad)),
                           constant_values=-1))
         cents.append(np.asarray(pk.centroids))
         sizes.append(np.asarray(pk.sizes))
-        reranks.append(np.asarray(pk.rerank))
-        bases.append(s * nl)
+        reranks.append(np.pad(np.asarray(pk.rerank),
+                              ((0, nmax - nl), (0, 0))))
+        bases.append(base)
+        base += nl
+    return packed, resolved, ids, cents, sizes, reranks, bases
+
+
+def sharded_from_indexes(indexes) -> ShardedIVF:
+    """Stack per-shard indexes (IVFIndex or MutableIVF) into a ShardedIVF.
+
+    The refresh path after online mutation: each shard's live snapshot is
+    packed and padded to the common (pmax, n_local) envelope; local ids
+    keep their shard-stable values and globalize via the cumulative base
+    offsets.
+    """
+    _, _, ids, cents, sizes, reranks, bases = _stack_shards(indexes)
     return ShardedIVF(
         jnp.asarray(np.stack(cents)), jnp.asarray(np.stack(ids)),
         jnp.asarray(np.stack(sizes)), jnp.asarray(np.stack(reranks)),
         jnp.asarray(np.array(bases, np.int32)))
+
+
+def build_sharded_ivf(key, X: np.ndarray, n_shards: int, n_partitions: int,
+                      spill_mode: str = "soar", lam: float = 1.0,
+                      train_iters: int = 8) -> ShardedIVF:
+    """Host-side build: split X row-wise, build one spilled IVF per shard.
+
+    Each per-shard build runs the streamed driver (core/build.py), so peak
+    accelerator memory is O(shard tile) rather than O(n/D).
+    """
+    n = X.shape[0]
+    assert n % n_shards == 0
+    nl = n // n_shards
+    indexes = [
+        build_ivf_sharded(jax.random.fold_in(key, s),
+                          X[s * nl:(s + 1) * nl], n_partitions,
+                          spill_mode=spill_mode, lam=lam,
+                          train_iters=train_iters)
+        for s in range(n_shards)
+    ]
+    return sharded_from_indexes(indexes)
+
+
+def make_sharded_assign(mesh, axes: Tuple[str, ...], *,
+                        spill_mode: str = "soar", lam: float = 1.0,
+                        n_spills: int = 1, chunk: int = 8192):
+    """Build-side shard_map: fn(X rows sharded over `axes`, C replicated)
+    → (n, 1 + n_spills) assignments, sharded like X.
+
+    Assignment against a frozen replicated codebook is embarrassingly
+    parallel — no collectives — which is exactly why the sharded build
+    scales linearly with the mesh (DESIGN.md §3.7). Routes through the
+    same `assign_fused` dispatcher as every other entry point (Pallas on
+    TPU, chunked GEMM elsewhere; spill_mode semantics via spill_plan).
+    Pairs with the serving local-search paths above, which consume the
+    resulting per-shard CSR.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    eff_lam, eff_spills = spill_plan(spill_mode, lam, n_spills)
+
+    def local(Xs, C):
+        return assign_fused(Xs, C, lam=eff_lam, n_spills=eff_spills,
+                            chunk=chunk)
+
+    a = axes if len(axes) > 1 else axes[0]
+    return shard_map(local, mesh=mesh, in_specs=(P(a), P()),
+                     out_specs=P(a), check_rep=False)
 
 
 def abstract_sharded_ivf(n_shards: int, n_local: int, n_partitions: int,
@@ -124,8 +190,13 @@ def sharded_ivf_pq_pspecs(axes: Tuple[str, ...]) -> ShardedIVFPQ:
 
 
 def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
-                            final_k: int):
-    """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global."""
+                            final_k: int, multiplicity: int = 2):
+    """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global.
+
+    Pass multiplicity ≥ 1 + n_spills when serving multi-spill shards
+    (dedup_topk_window's correctness bound); default 2 covers the
+    single-spill "naive"/"soar" builds.
+    """
     from jax.experimental.shard_map import shard_map
 
     def local_search(ivf: ShardedIVF, Q):
@@ -143,8 +214,13 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         valid = ids >= 0
         scores = jnp.einsum("qwd,qd->qw", rerank[jnp.maximum(ids, 0)], Q)
         scores = jnp.where(valid, scores, -jnp.inf)
-        ids, vals = dedup_topk_window(ids, scores, final_k)
-        ids = (ids + base).astype(jnp.int32)               # (nq, k) local best
+        ids, vals = dedup_topk_window(ids, scores, final_k, multiplicity)
+        # a tombstone-heavy mutable shard (sharded_from_indexes) can have a
+        # window narrower than final_k — pad to keep the merge shapes fixed
+        ids, vals = _pad_topk(ids, vals, final_k)
+        # globalize local ids, preserving the -1 padding sentinel (an
+        # under-filled window must not alias into the previous shard)
+        ids = jnp.where(ids >= 0, ids + base, -1).astype(jnp.int32)
         # global merge: gather every shard's candidates, re-top-k
         ax = axes[0] if len(axes) == 1 else axes
         all_ids = jax.lax.all_gather(ids, ax, tiled=False)   # (D, nq, k)
@@ -166,7 +242,7 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
 
 def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
                                final_k: int, rerank_k: int = 256,
-                               q_chunk: int = 128):
+                               q_chunk: int = 128, multiplicity: int = 2):
     """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
 
     Per shard per q_chunk tile: batched centroid top-t → PQ-score the
@@ -201,12 +277,15 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
             approx = window_pq_scores(luts, codes)
             approx = approx + jnp.repeat(psc, pmax, axis=-1)
             approx = jnp.where(valid, approx, -jnp.inf)
-            bi, bv = dedup_topk_window(ids, approx, rerank_k)
+            bi, bv = dedup_topk_window(ids, approx, rerank_k, multiplicity)
             exact = jnp.einsum("qbd,qd->qb", rerank[jnp.maximum(bi, 0)], Qb)
             exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
-            v, pos = jax.lax.top_k(exact, final_k)
-            return (jnp.take_along_axis(bi, pos, axis=-1)
-                    + base).astype(jnp.int32), v
+            v, pos = jax.lax.top_k(exact, min(final_k, exact.shape[-1]))
+            gi, v = _pad_topk(jnp.take_along_axis(bi, pos, axis=-1), v,
+                              final_k)
+            # keep the -1 sentinel out of the global id space: an
+            # under-filled tombstone-heavy shard must not alias elsewhere
+            return jnp.where(gi >= 0, gi + base, -1).astype(jnp.int32), v
 
         nq = Q.shape[0]
         Qc = Q.reshape(nq // q_chunk, q_chunk, -1)
@@ -231,38 +310,38 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
                      check_rep=False)
 
 
-def build_sharded_ivf_pq(key, X: np.ndarray, n_shards: int, n_partitions: int,
-                         pq_subspaces: int, spill_mode: str = "soar",
-                         lam: float = 1.0, train_iters: int = 8
-                         ) -> ShardedIVFPQ:
-    """Host-side build of the PQ-scored sharded index."""
-    n = X.shape[0]
-    assert n % n_shards == 0
-    nl = n // n_shards
-    packed = []
-    pmax = 0
-    for sh in range(n_shards):
-        Xs = X[sh * nl:(sh + 1) * nl]
-        idx = build_ivf(jax.random.fold_in(key, sh), Xs, n_partitions,
-                        spill_mode=spill_mode, lam=lam,
-                        pq_subspaces=pq_subspaces, train_iters=train_iters)
-        pk = pack_ivf(idx, pair_codes=False)
-        packed.append((pk, idx))
-        pmax = max(pmax, pk.part_ids.shape[1])
-    cents, ids, codes, pqcs, sizes, reranks, bases = [], [], [], [], [], [], []
-    for sh, (pk, idx) in enumerate(packed):
+def sharded_from_indexes_pq(indexes) -> ShardedIVFPQ:
+    """Stack per-shard PQ indexes (IVFIndex or MutableIVF) — the refresh
+    path that re-serves per-shard indexes after online mutation."""
+    packed, resolved, ids, cents, sizes, reranks, bases = (
+        _stack_shards(indexes))
+    pmax = ids[0].shape[1]
+    codes, pqcs = [], []
+    for pk, idx in zip(packed, resolved):
         pad = pmax - pk.part_ids.shape[1]
-        ids.append(np.pad(np.asarray(pk.part_ids), ((0, 0), (0, pad)),
-                          constant_values=-1))
         codes.append(np.pad(np.asarray(pk.part_codes),
                             ((0, 0), (0, pad), (0, 0))))
-        cents.append(np.asarray(pk.centroids))
         pqcs.append(np.asarray(idx.pq.centers))
-        sizes.append(np.asarray(pk.sizes))
-        reranks.append(np.asarray(pk.rerank))
-        bases.append(sh * nl)
     return ShardedIVFPQ(
         jnp.asarray(np.stack(cents)), jnp.asarray(np.stack(ids)),
         jnp.asarray(np.stack(codes)), jnp.asarray(np.stack(pqcs)),
         jnp.asarray(np.stack(sizes)), jnp.asarray(np.stack(reranks)),
         jnp.asarray(np.array(bases, np.int32)))
+
+
+def build_sharded_ivf_pq(key, X: np.ndarray, n_shards: int, n_partitions: int,
+                         pq_subspaces: int, spill_mode: str = "soar",
+                         lam: float = 1.0, train_iters: int = 8
+                         ) -> ShardedIVFPQ:
+    """Host-side build of the PQ-scored sharded index (streamed per shard)."""
+    n = X.shape[0]
+    assert n % n_shards == 0
+    nl = n // n_shards
+    indexes = [
+        build_ivf_sharded(jax.random.fold_in(key, sh),
+                          X[sh * nl:(sh + 1) * nl], n_partitions,
+                          spill_mode=spill_mode, lam=lam,
+                          pq_subspaces=pq_subspaces, train_iters=train_iters)
+        for sh in range(n_shards)
+    ]
+    return sharded_from_indexes_pq(indexes)

@@ -80,6 +80,61 @@ def _csr_from_assignments(assignments: np.ndarray, c: int):
     return starts, point_ids, order
 
 
+# train_pq's own subsample cap — finalize_ivf replicates its selection so the
+# streamed path is bitwise-identical to the old materialize-everything path
+PQ_TRAIN_SAMPLE = 100_000
+
+
+def finalize_ivf(kpq, X, C, assignments: np.ndarray, *, pq_subspaces: int = 0,
+                 rerank: str = "f32", spill_mode: str = "soar",
+                 lam: float = 1.0, pq: Optional[PQCodebook] = None,
+                 encode_chunk: int = 65_536) -> IVFIndex:
+    """CSR + residual-PQ + rerank assembly shared by every build path
+    (monolithic `build_ivf`, sharded `core/build.py`, mutation compaction).
+
+    All per-assignment float work (residual gather + PQ encode) streams in
+    `encode_chunk` tiles, so accelerator peak stays O(encode_chunk·d) no
+    matter how large the index; only integer CSR arrays and the host-side
+    dataset are O(n). When `pq` is passed the codebook is FROZEN (the
+    incremental-insert contract, DESIGN.md §3.7): only encoding runs.
+    """
+    Xh = np.asarray(X, np.float32)
+    Ch = np.asarray(C, np.float32)
+    assignments = np.asarray(assignments, np.int32)
+    n = Xh.shape[0]
+    starts, point_ids, order = _csr_from_assignments(assignments,
+                                                     Ch.shape[0])
+    codes = None
+    if pq is not None or pq_subspaces > 0:
+        # residuals w.r.t. the centroid of EACH assignment, in CSR order
+        flat_part = assignments.reshape(-1)[order]
+        if pq is None:
+            na = point_ids.shape[0]
+            if na > PQ_TRAIN_SAMPLE:   # mirror train_pq's internal sampling
+                sel = np.asarray(jax.random.choice(
+                    kpq, na, (PQ_TRAIN_SAMPLE,), replace=False))
+            else:
+                sel = slice(None)
+            res = Xh[point_ids[sel]] - Ch[flat_part[sel]]
+            pq = train_pq(kpq, jnp.asarray(res), pq_subspaces)
+        parts_out = []
+        for i in range(0, point_ids.shape[0], encode_chunk):
+            res = (Xh[point_ids[i:i + encode_chunk]]
+                   - Ch[flat_part[i:i + encode_chunk]])
+            parts_out.append(np.asarray(pq_encode(pq, jnp.asarray(res))))
+        m = pq.centers.shape[0]
+        codes = (np.concatenate(parts_out) if parts_out
+                 else np.zeros((0, m), np.uint8))
+
+    rerank_int8 = int8_quantize(jnp.asarray(Xh)) if rerank == "int8" else None
+    rerank_f32 = Xh if rerank == "f32" else None
+
+    return IVFIndex(
+        centroids=Ch, starts=starts, point_ids=point_ids,
+        codes=codes, pq=pq, rerank_int8=rerank_int8, rerank_f32=rerank_f32,
+        assignments=assignments, n_points=n, spill_mode=spill_mode, lam=lam)
+
+
 def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
               lam: float = 1.0, n_spills: int = 1, pq_subspaces: int = 0,
               rerank: str = "f32", train_iters: int = 15,
@@ -89,6 +144,10 @@ def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
     spill_mode: "none" (plain IVF), "naive" (2nd-closest centroid),
     "soar" (the paper's loss). PQ codes encode the residual w.r.t. the
     assignment's own centroid (duplicated per assignment, per Figure 5).
+
+    This is the monolithic single-host path (Lloyd iterations over the full
+    dataset). For O(shard) peak memory and sample-trained codebooks, see
+    `core/build.py::build_ivf_sharded`.
     """
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
@@ -117,22 +176,5 @@ def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
     else:
         raise ValueError(spill_mode)
 
-    starts, point_ids, order = _csr_from_assignments(assignments, n_partitions)
-
-    codes = None
-    pq = None
-    if pq_subspaces > 0:
-        # residuals w.r.t. the centroid of EACH assignment, in CSR order
-        flat_part = assignments.reshape(-1)[order]
-        flat_pid = point_ids
-        residuals = np.asarray(X)[flat_pid] - np.asarray(C)[flat_part]
-        pq = train_pq(kpq, jnp.asarray(residuals), pq_subspaces)
-        codes = np.asarray(pq_encode(pq, jnp.asarray(residuals)))
-
-    rerank_int8 = int8_quantize(X) if rerank == "int8" else None
-    rerank_f32 = np.asarray(X) if rerank == "f32" else None
-
-    return IVFIndex(
-        centroids=np.asarray(C), starts=starts, point_ids=point_ids,
-        codes=codes, pq=pq, rerank_int8=rerank_int8, rerank_f32=rerank_f32,
-        assignments=assignments, n_points=n, spill_mode=spill_mode, lam=lam)
+    return finalize_ivf(kpq, X, C, assignments, pq_subspaces=pq_subspaces,
+                        rerank=rerank, spill_mode=spill_mode, lam=lam)

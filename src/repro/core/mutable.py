@@ -1,0 +1,297 @@
+"""Mutable packed SOAR index: online insert/delete over a frozen codebook
+(DESIGN.md §3.7).
+
+A serving index cannot rebuild-the-world per mutation. Following the
+SPANN/ScaNN playbook, the VQ codebook and PQ codebook are FROZEN at build
+time, which makes mutations local:
+
+- **insert**: the new vectors' primary + SOAR spill assignments are one
+  fused-assign call against the fixed centroids (`kernels/soar_assign.py`)
+  plus PQ encoding of their residuals — O(batch · c), nothing global moves;
+- **delete**: a tombstone — the point's partition slots are blanked to -1
+  (exactly the padding sentinel the search pipeline already masks to -inf),
+  so deletion needs no data movement at all;
+- **compaction**: tombstones waste probed-window slots, so when more than
+  `compact_threshold` of occupied slots are dead, one vectorized pass
+  shifts live slots left per partition and shrinks `sizes`.
+
+Partition arrays are padded to a capacity that grows geometrically, so
+appends are amortized O(batch). Point ids are STABLE across every mutation
+(external handles never dangle); id space is append-only and dead rerank
+rows are reclaimed only by `compact(reclaim=True)`.
+
+Search serves from snapshots: `pack()` → PackedIVF for the candidate-local
+jit pipeline, `to_ivf_index()` → CSR IVFIndex for the numpy engine. Both
+are cached and invalidated by mutation; the equivalence contract — an index
+mutated into a state equals a from-scratch build of that state against the
+same frozen stages — is pinned by tests/test_mutable.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_ivf_sharded, spill_plan
+from repro.core.ivf import IVFIndex, finalize_ivf
+from repro.core.search import PackedIVF, _paired_codes
+from repro.kernels.soar_assign import assign_fused
+from repro.quant.pq import PQCodebook, pq_encode
+
+
+def _grow_rows(arr: np.ndarray, n_new: int, fill) -> np.ndarray:
+    """Geometric row growth to at least n_new rows."""
+    if arr.shape[0] >= n_new:
+        return arr
+    cap = max(n_new, 2 * arr.shape[0], 64)
+    out = np.full((cap,) + arr.shape[1:], fill, arr.dtype)
+    out[:arr.shape[0]] = arr
+    return out
+
+
+@dataclass
+class MutableIVF:
+    """Mutable padded-partition SOAR index over frozen VQ/PQ codebooks."""
+    centroids: np.ndarray               # (c, d) f32, FROZEN
+    pq: Optional[PQCodebook]            # FROZEN (None → no PQ stage)
+    spill_mode: str
+    lam: float
+    n_spills: int                       # spills per point (0 for "none")
+    part_ids: np.ndarray                # (c, cap) int32; -1 = empty/tombstone
+    part_codes: Optional[np.ndarray]    # (c, cap, m) uint8
+    sizes: np.ndarray                   # (c,) int32 slots in use (incl. dead)
+    rerank: np.ndarray                  # (cap_n, d) f32 by point id
+    assignments: np.ndarray             # (cap_n, a) int32; -1 rows dead/unused
+    alive: np.ndarray                   # (cap_n,) bool
+    n_total: int                        # high-water point id (append-only)
+    n_dead_slots: int = 0
+    compact_threshold: float = 0.25
+    _packed: Optional[PackedIVF] = field(default=None, repr=False)
+    _packed_pair: Optional[bool] = field(default=None, repr=False)
+    _csr: Optional[IVFIndex] = field(default=None, repr=False)
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_index(cls, idx: IVFIndex, compact_threshold: float = 0.25,
+                   capacity_slack: float = 1.25) -> "MutableIVF":
+        """Wrap a built IVFIndex (any builder) into the mutable layout."""
+        c = idx.n_partitions
+        sizes = idx.partition_sizes().astype(np.int32)
+        cap = max(8, int(np.ceil(sizes.max() * capacity_slack))
+                  if sizes.size else 8)
+        part_ids = np.full((c, cap), -1, np.int32)
+        m = idx.codes.shape[1] if idx.codes is not None else 0
+        part_codes = np.zeros((c, cap, m), np.uint8) if m else None
+        part = np.repeat(np.arange(c), sizes)
+        pos = (np.arange(idx.n_assignments)
+               - np.repeat(idx.starts[:-1], sizes)).astype(np.int64)
+        part_ids[part, pos] = idx.point_ids
+        if m:
+            part_codes[part, pos] = idx.codes
+        data = idx.rerank_f32
+        if data is None:
+            from repro.quant.int8 import int8_dequantize
+            data = np.asarray(int8_dequantize(idx.rerank_int8))
+        a = idx.assignments.shape[1]
+        _, n_spills = spill_plan(idx.spill_mode, idx.lam, a - 1)
+        return cls(
+            centroids=np.asarray(idx.centroids, np.float32), pq=idx.pq,
+            spill_mode=idx.spill_mode, lam=idx.lam, n_spills=n_spills,
+            part_ids=part_ids, part_codes=part_codes, sizes=sizes,
+            rerank=np.ascontiguousarray(data, dtype=np.float32),
+            assignments=np.asarray(idx.assignments, np.int32).copy(),
+            alive=np.ones(idx.n_points, bool), n_total=idx.n_points,
+            compact_threshold=compact_threshold)
+
+    @classmethod
+    def build(cls, key, X, n_partitions: int, **kw) -> "MutableIVF":
+        """Sharded build (core/build.py) → mutable wrap."""
+        compact_threshold = kw.pop("compact_threshold", 0.25)
+        idx = build_ivf_sharded(key, X, n_partitions, **kw)
+        return cls.from_index(idx, compact_threshold=compact_threshold)
+
+    # ------------------------------------------------------------ accessors
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive[:self.n_total].sum())
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.sizes.sum())
+
+    @property
+    def dead_fraction(self) -> float:
+        s = self.n_slots
+        return self.n_dead_slots / s if s else 0.0
+
+    def _invalidate(self):
+        self._packed = None
+        self._csr = None
+
+    # ------------------------------------------------------------ mutation
+    def add(self, X_new) -> np.ndarray:
+        """Insert a batch of vectors; returns their (stable) point ids.
+
+        Assignments are computed incrementally against the frozen codebook
+        via the fused batched path; PQ codes encode the residual w.r.t.
+        each assignment's centroid, exactly as at build time.
+        """
+        X_new = np.atleast_2d(np.asarray(X_new, np.float32))
+        b = X_new.shape[0]
+        if b == 0:
+            return np.empty((0,), np.int32)
+        eff_lam, eff_spills = spill_plan(self.spill_mode, self.lam,
+                                         self.n_spills)
+        # right-size the streamed tile: a 64-row online insert must not pay
+        # for an 8192-row padded tile (compile cache is per chunk size, and
+        # online batch sizes are few and repeated)
+        chunk = min(8192, max(256, 1 << (b - 1).bit_length()))
+        A = np.asarray(assign_fused(jnp.asarray(X_new),
+                                    jnp.asarray(self.centroids),
+                                    lam=eff_lam, n_spills=eff_spills,
+                                    chunk=chunk))
+        a = A.shape[1]
+        ids = np.arange(self.n_total, self.n_total + b, dtype=np.int32)
+
+        # per-point state (geometric growth keeps appends amortized O(b))
+        need = self.n_total + b
+        self.rerank = _grow_rows(self.rerank, need, 0.0)
+        self.assignments = _grow_rows(self.assignments, need, -1)
+        self.alive = _grow_rows(self.alive, need, False)
+        self.rerank[self.n_total:need] = X_new
+        self.assignments[self.n_total:need] = A
+        self.alive[self.n_total:need] = True
+
+        # partition inserts: group the (b·a) flat entries by partition and
+        # append each group at its partition's current fill offset
+        flat_part = A.reshape(-1)
+        flat_pid = np.repeat(ids, a)
+        order = np.argsort(flat_part, kind="stable")
+        sp = flat_part[order]
+        counts = np.bincount(sp, minlength=self.centroids.shape[0])
+        new_sizes = self.sizes + counts.astype(np.int32)
+        cap = self.part_ids.shape[1]
+        if new_sizes.max() > cap:
+            new_cap = max(int(new_sizes.max()), 2 * cap)
+            grown = np.full((self.part_ids.shape[0], new_cap), -1, np.int32)
+            grown[:, :cap] = self.part_ids
+            self.part_ids = grown
+            if self.part_codes is not None:
+                m = self.part_codes.shape[2]
+                gc = np.zeros((self.part_codes.shape[0], new_cap, m),
+                              np.uint8)
+                gc[:, :cap] = self.part_codes
+                self.part_codes = gc
+        rank = np.arange(sp.shape[0]) - np.searchsorted(sp, sp)
+        pos = self.sizes[sp] + rank
+        self.part_ids[sp, pos] = flat_pid[order]
+        if self.pq is not None and self.part_codes is not None:
+            res = np.repeat(X_new, a, axis=0) - self.centroids[flat_part]
+            ec = min(16384, max(256, 1 << (res.shape[0] - 1).bit_length()))
+            codes = np.asarray(pq_encode(self.pq, jnp.asarray(res),
+                                         chunk=ec))
+            self.part_codes[sp, pos] = codes[order]
+        self.sizes = new_sizes
+        self.n_total = need
+        self._invalidate()
+        return ids
+
+    def remove(self, ids: Sequence[int]) -> int:
+        """Tombstone a batch of point ids; returns how many were removed.
+
+        Slots blank to -1 (the search pipelines' existing padding sentinel)
+        — no data moves. Compaction runs automatically once the dead-slot
+        fraction crosses `compact_threshold`.
+        """
+        ids = np.unique(np.asarray(ids, np.int64))
+        ids = ids[(ids >= 0) & (ids < self.n_total)]
+        ids = ids[self.alive[ids]]
+        if ids.size == 0:
+            return 0
+        self.alive[ids] = False
+        rows = np.unique(self.assignments[ids].reshape(-1))
+        rows = rows[rows >= 0]
+        sub = self.part_ids[rows]
+        dead = np.isin(sub, ids)
+        self.part_ids[rows] = np.where(dead, -1, sub)
+        self.n_dead_slots += int(dead.sum())
+        self.assignments[ids] = -1
+        self._invalidate()
+        if self.dead_fraction > self.compact_threshold:
+            self.compact()
+        return int(ids.size)
+
+    def compact(self):
+        """Shift live slots left within each partition, dropping tombstones.
+
+        One vectorized stable argsort per row; slot order (hence search
+        tie-breaking) of survivors is preserved. Point ids do not change.
+        """
+        hole = self.part_ids < 0
+        order = np.argsort(hole, axis=1, kind="stable")   # live slots first
+        self.part_ids = np.take_along_axis(self.part_ids, order, axis=1)
+        if self.part_codes is not None:
+            self.part_codes = np.take_along_axis(
+                self.part_codes, order[:, :, None], axis=1)
+        self.sizes = (self.part_ids >= 0).sum(axis=1).astype(np.int32)
+        self.n_dead_slots = 0
+        self._invalidate()
+
+    # ------------------------------------------------------------ snapshots
+    def pack(self, pair_codes: Optional[bool] = None) -> PackedIVF:
+        """Padded snapshot for the candidate-local jit pipeline (cached;
+        the pair_codes choice is part of the cache identity)."""
+        if pair_codes is None:
+            pair_codes = jax.default_backend() != "tpu"
+        if self._packed is not None and self._packed_pair == pair_codes:
+            return self._packed
+        pmax = max(int(self.sizes.max()) if self.sizes.size else 1, 1)
+        ids = self.part_ids[:, :pmax]
+        codes = (self.part_codes[:, :pmax]
+                 if self.part_codes is not None else None)
+        live_sizes = (ids >= 0).sum(axis=1).astype(np.int32)
+        self._packed = PackedIVF(
+            jnp.asarray(self.centroids), jnp.asarray(ids),
+            jnp.asarray(codes) if codes is not None else None,
+            (jnp.asarray(_paired_codes(codes))
+             if codes is not None and pair_codes else None),
+            jnp.asarray(live_sizes), self.pq,
+            jnp.asarray(self.rerank[:self.n_total]))
+        self._packed_pair = pair_codes
+        return self._packed
+
+    def to_ivf_index(self) -> IVFIndex:
+        """CSR snapshot of the live assignments (numpy engine; cached).
+
+        Point ids keep their stable values; dead rerank rows remain in the
+        array (they are never referenced by any partition slot).
+        """
+        if self._csr is not None:
+            return self._csr
+        c, cap = self.part_ids.shape
+        mask = self.part_ids >= 0
+        counts = mask.sum(axis=1)
+        starts = np.zeros(c + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        point_ids = self.part_ids[mask].astype(np.int32)
+        codes = self.part_codes[mask] if self.part_codes is not None else None
+        self._csr = IVFIndex(
+            centroids=self.centroids, starts=starts, point_ids=point_ids,
+            codes=codes, pq=self.pq, rerank_int8=None,
+            rerank_f32=self.rerank[:self.n_total],
+            assignments=self.assignments[:self.n_total],
+            n_points=self.n_total, spill_mode=self.spill_mode, lam=self.lam)
+        return self._csr
+
+    def rebuild_reference(self, key=None) -> IVFIndex:
+        """From-scratch build of the CURRENT live state against the same
+        frozen codebook/PQ (the mutation-equivalence comparator)."""
+        live = np.flatnonzero(self.alive[:self.n_total])
+        return build_ivf_sharded(
+            key, self.rerank[live], self.centroids.shape[0],
+            spill_mode=self.spill_mode, lam=self.lam,
+            n_spills=max(self.n_spills, 1), codebook=self.centroids,
+            pq=self.pq)

@@ -270,6 +270,18 @@ def dedup_topk_window(ids, scores, k: int, multiplicity: int = 2):
     return jnp.take_along_axis(ids_s, pos, axis=-1).astype(jnp.int32), v
 
 
+def _pad_topk(ids, vals, k: int):
+    """Pad (..., k') top-k outputs to width k with -1 ids / -inf scores —
+    degenerate indexes (t·pmax < k, e.g. a fully-tombstoned mutable index)
+    keep the caller-visible (nq, final_k) contract."""
+    short = k - ids.shape[-1]
+    if short <= 0:
+        return ids, vals
+    pads = [(0, 0)] * (ids.ndim - 1) + [(0, short)]
+    return (jnp.pad(ids, pads, constant_values=-1),
+            jnp.pad(vals, pads, constant_values=-jnp.inf))
+
+
 def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
                   rerank_budget: int, multiplicity: int = 2):
     """Candidate-local search body shared by search_jit / search_jit_batched.
@@ -289,7 +301,8 @@ def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
         exact = jnp.einsum("qwd,qd->qw",
                            packed.rerank[jnp.maximum(ids, 0)], Q)
         exact = jnp.where(valid, exact, -jnp.inf)
-        return dedup_topk_window(ids, exact, final_k, multiplicity)
+        di, dv = dedup_topk_window(ids, exact, final_k, multiplicity)
+        return _pad_topk(di, dv, final_k)
     luts = jax.vmap(lambda q: pq_lut(packed.pq, q))(Q)         # (nq, m, 16)
     if jax.default_backend() != "tpu" and packed.part_codes2 is not None:
         # CPU: pair-merged LUT gather (half the lookups of per-subspace)
@@ -305,8 +318,8 @@ def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
     bi, bv = dedup_topk_window(ids, approx, rerank_budget, multiplicity)
     exact = jnp.einsum("qbd,qd->qb", packed.rerank[jnp.maximum(bi, 0)], Q)
     exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
-    fv, fpos = jax.lax.top_k(exact, final_k)
-    return jnp.take_along_axis(bi, fpos, axis=-1), fv
+    fv, fpos = jax.lax.top_k(exact, min(final_k, exact.shape[-1]))
+    return _pad_topk(jnp.take_along_axis(bi, fpos, axis=-1), fv, final_k)
 
 
 @functools.partial(jax.jit, static_argnames=("top_t", "final_k",

@@ -107,3 +107,86 @@ def soar_assign_pallas(X, rhat, primary, C, lam: float = 1.0,
     )(Xp, Rp, rx, prim, Cp, cn)
     xn = jnp.sum(X * X, axis=-1)
     return idx[:n, 0], val[:n, 0] + xn
+
+
+# --------------------------------------------------------------------------
+# Batched/fused primary + spill assignment (the sharded-build hot path)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_spills", "chunk"))
+def _fused_assign_gemm(X, C, lam: float, n_spills: int, chunk: int):
+    """Chunked fused primary + spill assignment (non-TPU backends).
+
+    Per tile of X: ONE X·Cᵀ GEMM shared by the primary argmin and every
+    spill step's distance term (the reassociated two-GEMM loss form of
+    core/soar.py); each spill adds one R̂·Cᵀ GEMM and accumulates its
+    orthogonality penalty, so the full multi-spill objective of
+    `soar_assign_multi` is preserved. Total 1 + n_spills GEMM passes over
+    the data vs 2 + 2·n_spills for the unfused train-then-spill sequence.
+    """
+    from repro.utils import chunked_map
+
+    cn = jnp.sum(C * C, axis=-1)
+    c = C.shape[0]
+
+    def f(xb):
+        xc = xb @ C.T                                       # shared GEMM
+        prim = jnp.argmin(cn[None, :] - 2.0 * xc, axis=-1).astype(jnp.int32)
+        assigns = [prim]
+        used = jax.nn.one_hot(prim, c, dtype=bool)
+        pen = jnp.zeros_like(xc)
+        for _ in range(n_spills):
+            r = xb - C[assigns[-1]]
+            rn = jnp.linalg.norm(r, axis=-1, keepdims=True)
+            rhat = r / jnp.maximum(rn, 1e-12)
+            rc = rhat @ C.T                                 # one GEMM / spill
+            rx = jnp.sum(rhat * xb, axis=-1)
+            pen = pen + (rx[:, None] - rc) ** 2
+            loss = cn[None, :] - 2.0 * xc + lam * pen
+            loss = jnp.where(used, jnp.inf, loss)
+            nxt = jnp.argmin(loss, axis=-1).astype(jnp.int32)
+            assigns.append(nxt)
+            used = used | jax.nn.one_hot(nxt, c, dtype=bool)
+        return jnp.stack(assigns, axis=1)
+
+    return chunked_map(f, X.astype(jnp.float32), chunk)
+
+
+def assign_fused(X, C, lam: float = 1.0, n_spills: int = 1,
+                 chunk: int = 8192, use_pallas: bool = None,
+                 interpret: bool = None):
+    """Primary + spilled assignment(s) against a FROZEN codebook, fused.
+
+    The sharded build driver (core/build.py) and the incremental-insert
+    path (core/mutable.py) both route through here: assignment is the only
+    per-point work at build time, so it runs as streamed tiles with nothing
+    materialized at O(n × c).
+
+    On TPU (or use_pallas=True) the single-spill case runs the Pallas
+    kernel above (two MXU passes per tile, loss matrix never leaves VMEM)
+    after a fused `vq_assign` primary pass; multi-spill and other backends
+    use the chunked two-GEMM jnp path, which shares the X·Cᵀ GEMM between
+    the primary argmin and every spill step.
+
+    Returns (n, 1 + n_spills) int32 assignments, column 0 primary.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    X = jnp.asarray(X, jnp.float32)
+    C = jnp.asarray(C, jnp.float32)
+    if n_spills == 0:
+        from repro.utils import pairwise_neg_sqdist_argmin
+        prim, _ = pairwise_neg_sqdist_argmin(X, C, chunk=chunk)
+        return prim[:, None]
+    if not use_pallas or n_spills > 1:
+        return _fused_assign_gemm(X, C, lam=lam, n_spills=n_spills,
+                                  chunk=chunk)
+    from repro.kernels.vq_assign import vq_assign_pallas
+    prim, _ = vq_assign_pallas(X, C, interpret=interpret)
+    r = X - C[prim]
+    rhat = r / jnp.maximum(jnp.linalg.norm(r, axis=-1, keepdims=True), 1e-12)
+    sec, _ = soar_assign_pallas(X, rhat, prim, C, lam=lam,
+                                interpret=interpret)
+    return jnp.stack([prim, sec], axis=1)

@@ -40,9 +40,13 @@ def train_pq(key, X, n_subspaces: int, n_centers: int = 16, iters: int = 8,
     return PQCodebook(jnp.stack(cents))
 
 
-@jax.jit
-def pq_encode(cb: PQCodebook, X) -> jax.Array:
-    """Encode rows of X → (n, m) uint8 codes."""
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def pq_encode(cb: PQCodebook, X, chunk: int = 16384) -> jax.Array:
+    """Encode rows of X → (n, m) uint8 codes.
+
+    `chunk` sizes the streamed tile; small online-mutation batches pass a
+    small chunk so a 64-row insert doesn't pay for a 16k-row padded tile.
+    """
     n, d = X.shape
     m, k, s = cb.centers.shape
     Xs = X.reshape(n, m, s)
@@ -54,7 +58,7 @@ def pq_encode(cb: PQCodebook, X) -> jax.Array:
               + jnp.sum(cb.centers * cb.centers, -1)[None])
         return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
 
-    return chunked_map(f, Xs, 16384)
+    return chunked_map(f, Xs, chunk)
 
 
 @jax.jit

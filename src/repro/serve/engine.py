@@ -1,16 +1,18 @@
-"""Serving engine: batched prefill + greedy decode over the model zoo.
+"""Serving engines: LM decode (prefill + greedy decode over the model zoo)
+and online ANN serving over a mutable SOAR index.
 
 `serve_step` (single decode step over a full KV cache) is the function the
 decode_32k / long_500k dry-run cells lower; `generate` is the CPU-runnable
-driver used by examples and tests.
+driver used by examples and tests. `AnnEngine` is the vector-search
+counterpart: add/remove/search against a live index (DESIGN.md §3.7).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -56,3 +58,54 @@ class ServeEngine:
                                      jnp.asarray(start + i, jnp.int32))
             out.append(tok)
         return jnp.concatenate(out, axis=1)
+
+
+class AnnEngine:
+    """Online ANN serving engine over a mutable SOAR index.
+
+    Wraps core/mutable.MutableIVF with the candidate-local jit search
+    pipeline (DESIGN.md §3.6): `search` serves from the index's cached
+    packed snapshot, which mutation (`add`/`remove`) invalidates — the
+    snapshot cost is amortized across the mutation batch, and the
+    tombstone/compaction policy (§3.7) bounds how stale the padded layout
+    can get. Point ids returned by `add` are stable handles for `remove`
+    and for joining search results back to caller-side payloads.
+    """
+
+    def __init__(self, index, *, top_t: int = 8, rerank_budget: int = 256,
+                 bq: int = 128):
+        self.index = index
+        self.top_t = top_t
+        self.rerank_budget = rerank_budget
+        self.bq = bq
+
+    @classmethod
+    def build(cls, key, X, n_partitions: int, *, spill_mode: str = "soar",
+              lam: float = 1.0, pq_subspaces: int = 0, top_t: int = 8,
+              rerank_budget: int = 256, bq: int = 128, **build_kw):
+        """Sharded build (core/build.py) → serving engine."""
+        from repro.core.mutable import MutableIVF
+        idx = MutableIVF.build(key, X, n_partitions, spill_mode=spill_mode,
+                               lam=lam, pq_subspaces=pq_subspaces, **build_kw)
+        return cls(idx, top_t=top_t, rerank_budget=rerank_budget, bq=bq)
+
+    @property
+    def n_alive(self) -> int:
+        return self.index.n_alive
+
+    def add(self, X) -> np.ndarray:
+        return self.index.add(X)
+
+    def remove(self, ids) -> int:
+        return self.index.remove(ids)
+
+    def search(self, Q, k: int = 10, top_t: Optional[int] = None):
+        """(nq, d) queries → (ids (nq, k) int32, scores (nq, k))."""
+        from repro.core.search import search_jit_batched
+        ids, vals = search_jit_batched(
+            self.index.pack(), jnp.asarray(Q, jnp.float32),
+            top_t=top_t or self.top_t, final_k=k,
+            rerank_budget=max(self.rerank_budget, k),
+            bq=min(self.bq, max(1, np.asarray(Q).shape[0])),
+            multiplicity=1 + max(self.index.n_spills, 1))
+        return np.asarray(ids), np.asarray(vals)

@@ -9,22 +9,30 @@ MIPS over keys — exactly the workload SOAR accelerates — and the spilled
 assignment rescues the high-<q,r> keys a single-partition index misses,
 which for attention are precisely the high-score (most important) keys.
 
+The index is MUTABLE (core/mutable.py): decode appends fresh KV pairs with
+`add` (incremental SOAR assignment against the frozen codebook — no
+retrain), and cache eviction tombstones them with `remove`. Retrieval
+serves from cached snapshots invalidated by mutation; snapshot rebuild is
+O(index), so batch mutations between retrievals (append a decode window at
+a time) — per-step add+retrieve pays a full repack each step (incremental
+delta packing is a ROADMAP item).
+
 This module is the serving-side integration; examples/knn_memory_decode.py
 demonstrates it end-to-end and tests/test_knn_memory.py validates retrieval
 quality (attention-output error vs exact attention).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ivf import build_ivf, IVFIndex
-from repro.core.search import (PackedIVF, pack_ivf, search_jit_batched,
-                               search_numpy)
+from repro.core.ivf import build_ivf
+from repro.core.mutable import MutableIVF, _grow_rows
+from repro.core.search import search_jit_batched, search_numpy
 
 
 @dataclass
@@ -32,16 +40,20 @@ class KNNMemory:
     """Per-(layer, head) SOAR index over cached keys.
 
     `engine` picks the retrieval path: "numpy" (host-orchestrated ragged
-    engine) or "jit" (the candidate-local fixed-budget pipeline, streamed in
-    bq-tiles — the TPU-target path; see DESIGN.md §3.6). Both dedup spilled
-    candidates window-locally, so retrieval cost never scales with the
-    number of cached keys beyond the probed partitions.
+    engine over the CSR snapshot) or "jit" (the candidate-local
+    fixed-budget pipeline over the packed snapshot, streamed in bq-tiles —
+    the TPU-target path; see DESIGN.md §3.6). Both dedup spilled candidates
+    window-locally, so retrieval cost never scales with the number of
+    cached keys beyond the probed partitions.
+
+    `values` is a capacity buffer grown geometrically in lockstep with the
+    index's id space (decode appends one position per step — appends must
+    be amortized O(batch), not O(n_total)); rows at or beyond
+    `index.n_total` are unused capacity.
     """
-    index: IVFIndex
-    keys: np.ndarray      # (n, hd)
-    values: np.ndarray    # (n, hd)
+    index: MutableIVF
+    values: np.ndarray    # (>= n_total, hd) capacity buffer, see above
     engine: str = "numpy"
-    _packed: Optional[PackedIVF] = field(default=None, repr=False)
 
     @classmethod
     def build(cls, keys: np.ndarray, values: np.ndarray,
@@ -52,22 +64,44 @@ class KNNMemory:
         c = n_partitions or max(4, n // 256)
         idx = build_ivf(jax.random.PRNGKey(seed), keys, c,
                         spill_mode=spill_mode, lam=lam, train_iters=6)
-        return cls(idx, np.asarray(keys, np.float32),
-                   np.asarray(values, np.float32), engine=engine)
+        return cls(MutableIVF.from_index(idx),
+                   np.array(values, np.float32), engine=engine)
+
+    @property
+    def keys(self) -> np.ndarray:
+        """Cached keys by id — the index's rerank array IS the key store."""
+        return self.index.rerank[:self.index.n_total]
+
+    def add(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Append fresh KV pairs (e.g. newly decoded positions); returns
+        their stable ids. Assignment is incremental — the codebook trained
+        at build time stays frozen (DESIGN.md §3.7)."""
+        keys = np.atleast_2d(np.asarray(keys, np.float32))
+        values = np.atleast_2d(np.asarray(values, np.float32))
+        assert keys.shape[0] == values.shape[0]
+        ids = self.index.add(keys)
+        self.values = _grow_rows(self.values, self.index.n_total, 0.0)
+        self.values[ids] = values
+        return ids
+
+    def remove(self, ids) -> int:
+        """Evict cached positions (tombstone; ids stay stable)."""
+        return self.index.remove(ids)
 
     def retrieve(self, q: np.ndarray, k: int = 32, top_t: int = 4):
         """q: (nq, hd) queries → (ids (nq,k), keys, values)."""
         if self.engine == "jit":
-            if self._packed is None:
-                self._packed = pack_ivf(self.index)
             jids, _ = search_jit_batched(
-                self._packed, jnp.asarray(q, jnp.float32), top_t=top_t,
+                self.index.pack(), jnp.asarray(q, jnp.float32), top_t=top_t,
                 final_k=k, rerank_budget=max(4 * k, 64),
-                bq=min(128, max(1, q.shape[0])))
+                bq=min(128, max(1, q.shape[0])),
+                multiplicity=1 + max(self.index.n_spills, 1))
             ids = np.asarray(jids)
         else:
-            ids, _ = search_numpy(self.index, q, top_t=top_t, final_k=k)
-        return ids, self.keys[ids], self.values[ids]
+            ids, _ = search_numpy(self.index.to_ivf_index(), q, top_t=top_t,
+                                  final_k=k)
+        safe = np.maximum(ids, 0)
+        return ids, self.keys[safe], self.values[safe]
 
     def attend(self, q: np.ndarray, k: int = 32, top_t: int = 4):
         """Approximate attention output for each query over retrieved keys.
@@ -79,7 +113,10 @@ class KNNMemory:
         logits = np.einsum("qd,qkd->qk", q, K) / np.sqrt(q.shape[-1])
         logits[ids < 0] = -1e30
         w = np.exp(logits - logits.max(axis=1, keepdims=True))
-        w /= w.sum(axis=1, keepdims=True)
+        # hard-mask padding so a query with NO retrieved keys (e.g. after
+        # full eviction) yields a zero output, not a uniform mix of row 0
+        w *= ids >= 0
+        w /= np.maximum(w.sum(axis=1, keepdims=True), 1e-30)
         return np.einsum("qk,qkd->qd", w, V), ids
 
 

@@ -1,0 +1,130 @@
+"""Sharded build driver (core/build.py) + fused assignment path.
+
+The load-bearing property: the streamed, O(shard)-memory pipeline is
+BITWISE-identical to the monolithic `build_ivf` when the codebook trains on
+the full data — sharding must be a memory layout choice, never a quality
+knob. (Exactness holds because per-row GEMM results are tile-shape
+independent on XLA; the fused path reuses the literal loss expressions of
+core/soar.py.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_ivf, build_ivf_sharded
+from repro.core.build import assign_shards, spill_plan, train_codebook
+from repro.core.kmeans import assign_euclidean
+from repro.core.soar import soar_assign, soar_assign_multi
+from repro.data.vectors import make_manifold
+from repro.kernels.soar_assign import assign_fused
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_manifold(jax.random.PRNGKey(0), n=4000, d=24, nq=16,
+                         intrinsic_dim=6)
+
+
+@pytest.fixture(scope="module")
+def codebook(ds):
+    return train_codebook(jax.random.PRNGKey(3), ds.X, 32, train_iters=4)
+
+
+def test_fused_assign_matches_composition(ds, codebook):
+    """assign_fused == (assign_euclidean, soar_assign) exactly."""
+    X, C = jnp.asarray(ds.X), jnp.asarray(codebook)
+    prim = assign_euclidean(X, C, chunk=8192)
+    sec = soar_assign(X, C, prim, lam=1.3, chunk=8192)
+    A = np.asarray(assign_fused(X, C, lam=1.3, n_spills=1, chunk=8192))
+    assert np.array_equal(A[:, 0], np.asarray(prim))
+    assert np.array_equal(A[:, 1], np.asarray(sec))
+
+
+def test_fused_assign_multi_matches_soar_multi(ds, codebook):
+    X, C = jnp.asarray(ds.X), jnp.asarray(codebook)
+    prim = assign_euclidean(X, C, chunk=8192)
+    want = np.asarray(soar_assign_multi(X, C, prim, lam=1.0, n_spills=3,
+                                        chunk=8192))
+    got = np.asarray(assign_fused(X, C, lam=1.0, n_spills=3, chunk=8192))
+    assert np.array_equal(got, want)
+
+
+def test_fused_assign_no_spill(ds, codebook):
+    A = np.asarray(assign_fused(ds.X, codebook, n_spills=0))
+    assert A.shape == (ds.X.shape[0], 1)
+    prim = np.asarray(assign_euclidean(jnp.asarray(ds.X),
+                                       jnp.asarray(codebook)))
+    assert np.array_equal(A[:, 0], prim)
+
+
+def test_spill_plan():
+    assert spill_plan("none", 1.0, 2) == (0.0, 0)
+    assert spill_plan("naive", 1.0, 2) == (0.0, 1)
+    assert spill_plan("soar", 1.5, 2) == (1.5, 2)
+    with pytest.raises(ValueError):
+        spill_plan("bogus", 1.0, 1)
+
+
+def test_sharded_build_equals_monolithic(ds):
+    """Full-sample sharded build is bitwise-identical to build_ivf."""
+    mono = build_ivf(jax.random.PRNGKey(1), ds.X, 32, spill_mode="soar",
+                     pq_subspaces=8, train_iters=4)
+    shard = build_ivf_sharded(jax.random.PRNGKey(1), ds.X, 32,
+                              spill_mode="soar", pq_subspaces=8,
+                              train_iters=4, train_sample=None,
+                              shard_size=1024)
+    assert np.array_equal(mono.centroids, shard.centroids)
+    assert np.array_equal(mono.assignments, shard.assignments)
+    assert np.array_equal(mono.starts, shard.starts)
+    assert np.array_equal(mono.point_ids, shard.point_ids)
+    assert np.array_equal(mono.codes, shard.codes)
+    np.testing.assert_array_equal(np.asarray(mono.pq.centers),
+                                  np.asarray(shard.pq.centers))
+
+
+def test_shard_size_invariance(ds, codebook):
+    """Shard boundaries are invisible: any shard_size, same index."""
+    a = assign_shards(ds.X, codebook, shard_size=512, chunk=256)
+    b = assign_shards(ds.X, codebook, shard_size=100_000, chunk=256)
+    assert np.array_equal(a, b)
+
+
+def test_frozen_codebook_build(ds, codebook):
+    """codebook=/pq= skip training and are used verbatim (the incremental
+    contract)."""
+    i1 = build_ivf_sharded(jax.random.PRNGKey(5), ds.X, 32,
+                           codebook=codebook, pq_subspaces=8, train_iters=4)
+    assert np.array_equal(i1.centroids, codebook)
+    i2 = build_ivf_sharded(None, ds.X[:2000], 32, codebook=codebook,
+                           pq=i1.pq)
+    assert i2.codes is not None
+    np.testing.assert_array_equal(np.asarray(i2.pq.centers),
+                                  np.asarray(i1.pq.centers))
+
+
+@pytest.mark.parametrize("mode,a", [("none", 1), ("naive", 2), ("soar", 2)])
+def test_spill_modes_shapes(ds, mode, a):
+    idx = build_ivf_sharded(jax.random.PRNGKey(2), ds.X[:1500], 16,
+                            spill_mode=mode, train_iters=3,
+                            train_sample=1024)
+    assert idx.assignments.shape == (1500, a)
+    assert idx.n_assignments == 1500 * a
+    if a == 2:
+        assert np.all(idx.assignments[:, 0] != idx.assignments[:, 1])
+
+
+def test_sharded_assign_shard_map(ds, codebook):
+    """The shard_map build path agrees with the host-streamed path."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import make_sharded_assign
+
+    devs = np.array(jax.devices())
+    n_dev = devs.shape[0]
+    n = (ds.X.shape[0] // n_dev) * n_dev
+    mesh = Mesh(devs, ("data",))
+    fn = make_sharded_assign(mesh, ("data",), lam=1.0, n_spills=1, chunk=512)
+    got = np.asarray(fn(jnp.asarray(ds.X[:n]), jnp.asarray(codebook)))
+    want = assign_shards(ds.X[:n], codebook, shard_size=n // n_dev,
+                         chunk=512)
+    assert np.array_equal(got, want)

@@ -1,0 +1,177 @@
+"""Mutable index (core/mutable.py): incremental mutation ≡ from-scratch.
+
+The pinned contract: an index mutated through build → add → delete →
+compact returns IDENTICAL search results to an index built from scratch on
+the same surviving vectors against the same frozen codebook/PQ — across
+both the jit and numpy engines. Identity (not approximate recall) is
+achievable because insertion order preserves CSR slot order and point-id
+maps are monotonic, so even sort tie-breaking coincides.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MutableIVF, build_ivf_sharded, pack_ivf, search_jit,
+                        search_numpy)
+from repro.data.vectors import make_manifold
+from repro.serve.engine import AnnEngine
+from repro.serve.knn_memory import KNNMemory
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_manifold(jax.random.PRNGKey(0), n=8000, d=24, nq=32,
+                         intrinsic_dim=6)
+
+
+@pytest.fixture(scope="module")
+def mutated(ds):
+    """build(6000) → add(2000) → remove(700) → compact, plus the
+    from-scratch comparator on the survivors."""
+    base, extra = ds.X[:6000], ds.X[6000:]
+    idx = build_ivf_sharded(jax.random.PRNGKey(1), base, 32,
+                            spill_mode="soar", pq_subspaces=8, train_iters=5)
+    mut = MutableIVF.from_index(idx)
+    new_ids = mut.add(extra)
+    rng = np.random.default_rng(0)
+    victims = np.concatenate([rng.choice(6000, 500, replace=False),
+                              rng.choice(new_ids, 200, replace=False)])
+    assert mut.remove(victims) == 700
+    mut.compact()
+    scratch = mut.rebuild_reference()
+    live = np.flatnonzero(mut.alive[:mut.n_total])
+    id_map = np.full(mut.n_total, -1, np.int64)
+    id_map[live] = np.arange(live.size)
+    return mut, scratch, id_map, victims
+
+
+def _mapped(ids, id_map):
+    return np.where(ids >= 0, id_map[np.maximum(ids, 0)], -1)
+
+
+def test_incremental_equals_scratch_jit(mutated, ds):
+    mut, scratch, id_map, _ = mutated
+    kw = dict(top_t=8, final_k=10, rerank_budget=128)
+    mi, mv = search_jit(mut.pack(), jnp.asarray(ds.Q), **kw)
+    si, sv = search_jit(pack_ivf(scratch), jnp.asarray(ds.Q), **kw)
+    assert np.array_equal(_mapped(np.asarray(mi), id_map), np.asarray(si))
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(sv),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_incremental_equals_scratch_numpy(mutated, ds):
+    mut, scratch, id_map, _ = mutated
+    kw = dict(top_t=8, final_k=10, rerank_budget=128)
+    mi, _ = search_numpy(mut.to_ivf_index(), ds.Q, **kw)
+    si, _ = search_numpy(scratch, ds.Q, **kw)
+    assert np.array_equal(_mapped(mi, id_map), si)
+
+
+def test_removed_ids_never_returned(mutated, ds):
+    mut, _, _, victims = mutated
+    ids, _ = search_jit(mut.pack(), jnp.asarray(ds.Q), top_t=16, final_k=20,
+                        rerank_budget=256)
+    assert not np.isin(np.asarray(ids), victims).any()
+    ids_np, _ = search_numpy(mut.to_ivf_index(), ds.Q, top_t=16, final_k=20)
+    assert not np.isin(ids_np, victims).any()
+
+
+def test_added_ids_retrievable(mutated, ds):
+    """Query AT an inserted vector → its id must come back on top."""
+    mut, _, _, _ = mutated
+    live_added = [i for i in range(6000, 8000) if mut.alive[i]][:16]
+    Q = mut.rerank[live_added]
+    ids, _ = search_jit(mut.pack(), jnp.asarray(Q), top_t=8, final_k=5,
+                        rerank_budget=64)
+    hit = (np.asarray(ids) == np.asarray(live_added)[:, None]).any(axis=1)
+    assert hit.mean() > 0.9
+
+
+def test_tombstones_then_threshold_compaction(ds):
+    idx = build_ivf_sharded(jax.random.PRNGKey(2), ds.X[:3000], 16,
+                            spill_mode="soar", train_iters=3)
+    mut = MutableIVF.from_index(idx, compact_threshold=0.2)
+    slots_before = mut.n_slots
+    mut.remove(np.arange(0, 3000, 10))           # 10% dead — below threshold
+    assert mut.n_dead_slots > 0 and mut.n_slots == slots_before
+    mut.remove(np.arange(1, 3000, 7))            # crosses 20% → auto-compact
+    assert mut.n_dead_slots == 0
+    assert mut.n_slots < slots_before
+    counts = np.bincount(mut.to_ivf_index().point_ids,
+                         minlength=mut.n_total)
+    alive = mut.alive[:mut.n_total]
+    assert np.all(counts[alive] == 2) and np.all(counts[~alive] == 0)
+
+
+def test_partition_capacity_growth(ds):
+    """Adding far more points than the initial capacity slack grows the
+    padded partition arrays instead of dropping assignments."""
+    idx = build_ivf_sharded(jax.random.PRNGKey(3), ds.X[:1000], 8,
+                            spill_mode="soar", pq_subspaces=8, train_iters=3)
+    mut = MutableIVF.from_index(idx)
+    cap0 = mut.part_ids.shape[1]
+    mut.add(ds.X[1000:5000])
+    assert mut.part_ids.shape[1] > cap0
+    assert mut.n_alive == 5000
+    counts = np.bincount(mut.to_ivf_index().point_ids, minlength=5000)
+    assert np.all(counts == 2)
+
+
+def test_remove_is_idempotent_and_bounded(ds):
+    idx = build_ivf_sharded(jax.random.PRNGKey(4), ds.X[:1000], 8,
+                            train_iters=3)
+    mut = MutableIVF.from_index(idx)
+    assert mut.remove([5, 5, 5]) == 1
+    assert mut.remove([5]) == 0                   # already dead
+    assert mut.remove([10**6, -3]) == 0           # out of range
+    assert mut.n_alive == 999
+
+
+def test_empty_then_repopulate(ds):
+    """Fully tombstoning the index must not break search (the candidate
+    window shrinks below final_k → padded -1 results), and re-adding into
+    the emptied index serves fresh stable ids."""
+    idx = build_ivf_sharded(jax.random.PRNGKey(6), ds.X[:1000], 8,
+                            pq_subspaces=8, train_iters=2)
+    mut = MutableIVF.from_index(idx)
+    mut.remove(np.arange(1000))
+    ids, vals = search_jit(mut.pack(), jnp.asarray(ds.Q[:4]), top_t=4,
+                           final_k=5, rerank_budget=16)
+    assert (np.asarray(ids) == -1).all() and np.asarray(ids).shape == (4, 5)
+    ids_np, _ = search_numpy(mut.to_ivf_index(), ds.Q[:4], top_t=4,
+                             final_k=5)
+    assert (ids_np == -1).all()
+    new = mut.add(ds.X[:50])
+    assert new[0] == 1000                       # id space is append-only
+    ids2, _ = search_jit(mut.pack(), jnp.asarray(ds.X[:8]), top_t=6,
+                         final_k=3, rerank_budget=32)
+    assert (np.asarray(ids2)[:, 0] == new[:8]).all()
+
+
+def test_knn_memory_online_mutation(ds):
+    keys, values = ds.X[:4000], np.tanh(ds.X[:4000] * 2.0)
+    extra_k, extra_v = ds.X[4000:4500], np.tanh(ds.X[4000:4500] * 2.0)
+    for engine in ("numpy", "jit"):
+        mem = KNNMemory.build(keys, values, n_partitions=16, engine=engine)
+        new_ids = mem.add(extra_k, extra_v)
+        assert new_ids.shape == (500,)
+        ids, K, V = mem.retrieve(extra_k[:8], k=4, top_t=4)
+        assert np.isin(new_ids[:8], ids).mean() > 0.9
+        mem.remove(new_ids)
+        ids2, _, _ = mem.retrieve(extra_k[:8], k=4, top_t=4)
+        assert not np.isin(ids2, new_ids).any()
+
+
+def test_ann_engine_roundtrip(ds):
+    eng = AnnEngine.build(jax.random.PRNGKey(5), ds.X[:3000], 16,
+                          pq_subspaces=8, train_iters=3, top_t=8)
+    ids0, _ = eng.search(ds.Q, k=5)
+    assert ids0.shape == (ds.Q.shape[0], 5) and (ids0 >= 0).all()
+    new = eng.add(ds.X[3000:3100])
+    assert eng.n_alive == 3100
+    ids1, _ = eng.search(np.asarray(ds.X[3000:3100]), k=3)
+    assert (ids1[:, 0] == new).mean() > 0.9
+    eng.remove(new)
+    ids2, _ = eng.search(np.asarray(ds.X[3000:3100]), k=3)
+    assert not np.isin(ids2, new).any()

@@ -117,6 +117,56 @@ def test_multi_spill_distinct_assignments():
         assert len(set(A[i])) == 4, f"duplicate assignment row {i}: {A[i]}"
 
 
+def test_multi_spill_lam0_agrees_with_naive_and_topk():
+    """§3.5.1 pins: at λ=0 the multi-spill chain degenerates to plain
+    k-nearest-centroid spilling — column 1 must equal `naive_spill_assign`
+    and columns 0..k must enumerate the (k+1) closest centroids in order."""
+    from repro.core.kmeans import assign_euclidean_topk
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    X = jax.random.normal(k1, (400, 24))
+    C = jax.random.normal(k2, (64, 24))
+    prim = assign_euclidean(X, C)
+    A = np.asarray(soar_assign_multi(X, C, prim, lam=0.0, n_spills=3))
+    nv = np.asarray(naive_spill_assign(X, C, prim))
+    assert np.array_equal(A[:, 1], nv)
+    topk = np.asarray(assign_euclidean_topk(X, C, k=4))
+    assert np.array_equal(A, topk)
+
+
+@pytest.mark.parametrize("lam", [0.5, 1.5])
+def test_multi_spill_loss_monotone(lam):
+    """At λ>0 successive spills have non-decreasing loss: step k+1
+    minimizes a pointwise-larger objective (one more orthogonality
+    penalty term) over a strictly smaller feasible set, so the chosen
+    minima must be ordered. Verified against brute-force objectives."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+    n, c, d = 300, 48, 16
+    X = jax.random.normal(k1, (n, d))
+    C = jax.random.normal(k2, (c, d))
+    prim = assign_euclidean(X, C)
+    A = np.asarray(soar_assign_multi(X, C, prim, lam=lam, n_spills=3))
+    rp_all = np.asarray(X)[:, None, :] - np.asarray(C)[None, :, :]
+    chosen_losses = []
+    pen = np.zeros((n, c))
+    for k in range(1, 4):
+        r = np.asarray(X) - np.asarray(C)[A[:, k - 1]]
+        rhat = r / np.maximum(np.linalg.norm(r, axis=-1, keepdims=True),
+                              1e-12)
+        pen = pen + np.einsum("nd,ncd->nc", rhat, rp_all) ** 2
+        loss_k = np.sum(rp_all * rp_all, -1) + lam * pen
+        used = (A[:, :k, None] == np.arange(c)[None, None, :]).any(axis=1)
+        masked = np.where(used, np.inf, loss_k)
+        # the chain picks the argmin of objective k over unused centroids
+        chosen = masked[np.arange(n), A[:, k]]
+        np.testing.assert_allclose(chosen, masked.min(axis=1),
+                                   rtol=1e-4, atol=1e-4)
+        chosen_losses.append(chosen)
+    L = np.stack(chosen_losses, axis=1)            # (n, 3)
+    assert np.all(L[:, 1] >= L[:, 0] - 1e-4)
+    assert np.all(L[:, 2] >= L[:, 1] - 1e-4)
+
+
 def test_lambda_monotonicity():
     """Figure 9: higher λ → higher spilled distortion E||r'||^2, lower
     parallel component."""
