@@ -1,21 +1,31 @@
 """Build + mutation pipeline benchmark — emits ``BENCH_build.json``.
 
-Covers the three claims of the sharded build/mutation subsystem
-(DESIGN.md §3.7):
+Covers the claims of the build-path overhaul (DESIGN.md §3.7/§3.8):
 
-1. **build throughput** — monolithic `build_ivf` vs streamed
-   `build_ivf_sharded` (sample-trained codebook, O(shard) tiles), wall
-   time and vectors/s;
+1. **build throughput** — monolithic `build_ivf` (fused Lloyd sweeps,
+   batched PQ training, one-pass residual encode) vs streamed
+   `build_ivf_sharded`. The headline rows report STEADY-STATE wall time
+   (a first identical build warms the jit caches; a production build
+   farm reuses compiled executables); the one-time compile cost is
+   emitted separately as ``build_monolithic_cold``. Per-phase rows
+   (kmeans / spill_assign / pq_train / encode / csr) localize
+   regressions to the responsible stage;
 2. **incremental-add latency** — per-batch `MutableIVF.add` (fused
    assignment against the frozen codebook + PQ encode + padded insert) at
    online (64) and bulk (1024) batch sizes, plus remove+compact latency;
-3. **recall after mutation** — recall@10 of an index mutated through
+3. **add+retrieve cadence** — the kNN-memory serving loop (add a batch,
+   pack, search): the delta `pack()` path vs a forced full re-pack each
+   step. The delta path wins at serving scale (~2x at n=100k) where a
+   full re-pack re-uploads O(index); at smoke scale the fixed per-pack
+   dispatch overhead exceeds the tiny repack, so the smoke rows document
+   the crossover rather than a win;
+4. **recall after mutation** — recall@10 of an index mutated through
    build → add → delete → compact vs a FULL REBUILD (fresh codebook) on
    the same surviving vectors. Acceptance: |Δrecall| ≤ 0.005.
 
 A fixed-shape GEMM calibration row (`build_calib_gemm`) is emitted so the
 CI regression gate (check_regression.py) can normalize latencies across
-machines before applying its 25% tolerance.
+machines before applying its tolerance.
 
     PYTHONPATH=src python -m benchmarks.bench_build [--smoke] [--out PATH]
 """
@@ -34,6 +44,8 @@ from repro.core import (MutableIVF, build_ivf, build_ivf_sharded, pack_ivf,
 from repro.data.vectors import glove_like
 
 RECALL_TOL = 0.005
+BUILD_PHASES = ("kmeans", "spill_assign", "pq_train", "encode", "csr",
+                "rerank")
 
 
 def _best_of(fn, reps: int = 5) -> float:
@@ -61,29 +73,55 @@ def run(n: int, c: int, train_iters: int, top_t: int, budget: int,
     n_base = int(n * 0.9)
     base, extra = X[:n_base], X[n_base:]
 
-    # calibration row: fixed-shape GEMM, machine-speed proxy for the gate
+    # calibration row: fixed-shape GEMM, machine-speed proxy for the gate.
+    # Sampled at the start, middle and end of the run (median emitted at
+    # the end): a single-point sample under bursty co-tenant load can
+    # catch a quiet (or loaded) instant that misrepresents the machine
+    # state the actual rows ran under, corrupting the gate normalization.
     A = jnp.asarray(np.random.default_rng(0).standard_normal(
         (2048, 256)), jnp.float32)
     B = jnp.asarray(np.random.default_rng(1).standard_normal(
         (256, 2048)), jnp.float32)
-    emit(f"build_calib_gemm_{label}", _best_of(lambda: A @ B),
-         "2048x256x2048 f32 GEMM (gate normalization row)")
+    calib_samples = [_best_of(lambda: A @ B)]
 
-    with Timer() as t_mono:
-        build_ivf(jax.random.PRNGKey(1), base, c, spill_mode="soar",
-                  pq_subspaces=25, train_iters=train_iters)
-    emit(f"build_monolithic_{label}", t_mono.us,
-         f"n={n_base} c={c} {n_base / (t_mono.us / 1e6):.0f} vec/s")
+    def mono():
+        tm = {}
+        with Timer() as t:
+            idx = build_ivf(jax.random.PRNGKey(1), base, c, spill_mode="soar",
+                            pq_subspaces=25, train_iters=train_iters,
+                            timings=tm)
+        return idx, t.us, tm
 
-    with Timer() as t_sh:
-        idx = build_ivf_sharded(jax.random.PRNGKey(1), base, c,
-                                spill_mode="soar", pq_subspaces=25,
-                                train_iters=train_iters,
-                                train_sample=min(n_base, 32_768),
-                                shard_size=16_384)
-    emit(f"build_sharded_{label}", t_sh.us,
-         f"n={n_base} c={c} {n_base / (t_sh.us / 1e6):.0f} vec/s "
-         f"speedup={t_mono.us / t_sh.us:.2f}x")
+    _, cold_us, _ = mono()                      # jit-cache warmup pass
+    emit(f"build_monolithic_cold_{label}", cold_us,
+         f"n={n_base} c={c} first build incl. one-time jit compiles")
+    mono_idx, mono_us, mono_tm = mono()
+    emit(f"build_monolithic_{label}", mono_us,
+         f"n={n_base} c={c} {n_base / (mono_us / 1e6):.0f} vec/s "
+         f"(steady-state)")
+    for ph in BUILD_PHASES:
+        emit(f"build_phase_{ph}_{label}", mono_tm.get(ph, 0.0) * 1e6,
+             f"monolithic {ph} phase")
+    tn_base = true_neighbors(base, Q, k=10)
+    rec_build = _recall(pack_ivf(mono_idx), Q, tn_base, top_t, budget)
+    emit(f"recall_build_{label}", 0.0,
+         f"recall@10={rec_build:.4f} fresh default-flag monolithic build")
+    del mono_idx
+
+    def sharded():
+        with Timer() as t:
+            idx = build_ivf_sharded(jax.random.PRNGKey(1), base, c,
+                                    spill_mode="soar", pq_subspaces=25,
+                                    train_iters=train_iters,
+                                    train_sample=min(n_base, 32_768),
+                                    shard_size=16_384)
+        return idx, t.us
+
+    sharded()                                   # warmup (shard-tile shapes)
+    idx, sh_us = sharded()
+    emit(f"build_sharded_{label}", sh_us,
+         f"n={n_base} c={c} {n_base / (sh_us / 1e6):.0f} vec/s "
+         f"speedup={mono_us / sh_us:.2f}x")
 
     # ---- incremental mutation: add 10%, delete 10%, compact ----
     mut = MutableIVF.from_index(idx)
@@ -93,12 +131,52 @@ def run(n: int, c: int, train_iters: int, top_t: int, budget: int,
         warm = mut.add(extra[:b])         # compile fused assign + encode
         mut.remove(warm)                  # at this batch's tile shapes
         mut.compact()
-        with Timer() as t_add:
-            ids_b = mut.add(extra[:b])
-        emit(f"incremental_add_b{b}_{label}", t_add.us,
-             f"{b / (t_add.us / 1e6):.0f} vec/s per-batch")
-        mut.remove(ids_b)
+        best = float("inf")
+        for _ in range(3):                # best-of: ms-scale rows are
+            with Timer() as t_add:        # contention-spike prone
+                ids_b = mut.add(extra[:b])
+            best = min(best, t_add.us)
+            mut.remove(ids_b)
+            mut.compact()
+        emit(f"incremental_add_b{b}_{label}", best,
+             f"{b / (best / 1e6):.0f} vec/s per-batch (best of 3)")
+
+    # ---- add+retrieve cadence: delta pack vs full re-pack each step ----
+    steps = 8
+    qcad = jnp.asarray(Q[:32])
+    kw = dict(top_t=top_t, final_k=10, rerank_budget=budget)
+
+    def cadence(full_repack: bool) -> float:
+        # like-for-like state: every run starts compacted with a freshly
+        # seeded snapshot, so accumulated tombstones from a previous run
+        # can't bias the comparison (and capacity growth can't silently
+        # turn a delta step into a timed full repack)
         mut.compact()
+        mut.pack()
+        t_total = 0.0
+        for i in range(steps):
+            lo = (i + 2) * 64
+            batch = extra[lo:lo + 64]
+            with Timer() as t:
+                ids_s = mut.add(batch)
+                if full_repack:
+                    mut.invalidate_snapshots()
+                jax.block_until_ready(search_jit(mut.pack(), qcad, **kw))
+            t_total += t.us
+            mut.remove(ids_s)
+        return t_total / steps
+
+    cadence(True)                         # warm both pack/search programs
+    cadence(False)
+    full_us = min(cadence(True), cadence(True))
+    delta_us = min(cadence(False), cadence(False))
+    emit(f"cadence_add_search_fullpack_{label}", full_us,
+         f"64-row add + full re-pack + search, per step")
+    emit(f"cadence_add_search_delta_{label}", delta_us,
+         f"64-row add + delta pack + search, per step "
+         f"speedup={full_us / max(delta_us, 1e-9):.2f}x")
+
+    calib_samples.append(_best_of(lambda: A @ B))      # mid-run sample
 
     new_ids = mut.add(extra)
     rng = np.random.default_rng(0)
@@ -144,6 +222,10 @@ def run(n: int, c: int, train_iters: int, top_t: int, budget: int,
     emit(f"recall_retrain_{label}", 0.0,
          f"retrain-recall {rec_rt:.4f} fresh codebook "
          f"d={rec_mut - rec_rt:+.4f} (informational, ungated)")
+    calib_samples.append(_best_of(lambda: A @ B))      # end-of-run sample
+    emit(f"build_calib_gemm_{label}", sorted(calib_samples)[1],
+         "2048x256x2048 f32 GEMM (gate normalization row; median of "
+         "start/mid/end samples)")
     assert abs(rec_mut - rec_rb) <= RECALL_TOL, (
         f"mutated recall {rec_mut:.4f} vs rebuild {rec_rb:.4f} "
         f"drifts beyond {RECALL_TOL}")

@@ -60,12 +60,15 @@ def spill_plan(spill_mode: str, lam: float, n_spills: int):
 def train_codebook(key, X, n_partitions: int, *,
                    train_sample: Optional[int] = DEFAULT_TRAIN_SAMPLE,
                    train_iters: int = 15, anisotropic_T: float = 0.0,
+                   init: str = "pp", batch_size: Optional[int] = None,
                    verbose: bool = False) -> np.ndarray:
     """Train the (to-be-frozen) VQ codebook on a row-subsample of X.
 
     With anisotropic_T > 0 the codebook is score-aware (quant/anisotropic);
     note the sharded pipeline always assigns primaries by Euclidean argmin,
-    so anisotropic *training* shapes the centroids only.
+    so anisotropic *training* shapes the centroids only. `init` /
+    `batch_size` select the flagged k-means|| / mini-batch training modes
+    (exact full-batch k-means++ path is the default, see core/kmeans.py).
     """
     n, d = X.shape
     if train_sample and n > train_sample:
@@ -80,7 +83,8 @@ def train_codebook(key, X, n_partitions: int, *,
                                   iters=max(4, train_iters // 3))
     else:
         C = train_kmeans(key, Xt, n_partitions, iters=train_iters,
-                         verbose=verbose).centroids
+                         verbose=verbose, init=init, batch_size=batch_size,
+                         final_assign=False).centroids
     return np.asarray(C, np.float32)
 
 
@@ -118,6 +122,8 @@ def build_ivf_sharded(key, X, n_partitions: int, *, spill_mode: str = "soar",
                       anisotropic_T: float = 0.0,
                       codebook: Optional[np.ndarray] = None,
                       pq: Optional[PQCodebook] = None,
+                      init: str = "pp", batch_size: Optional[int] = None,
+                      timings: Optional[dict] = None,
                       verbose: bool = False) -> IVFIndex:
     """Scalable build: sample-trained codebook, streamed assignment shards.
 
@@ -130,16 +136,23 @@ def build_ivf_sharded(key, X, n_partitions: int, *, spill_mode: str = "soar",
     given FROZEN stages — the path used for mutation-equivalence rebuilds
     and for re-indexing fresh data into an existing serving configuration.
     """
+    from repro.core.ivf import _phase
+
     X = np.asarray(X, np.float32)
     kkm, kpq = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
-    if codebook is None:
-        C = train_codebook(kkm, X, n_partitions, train_sample=train_sample,
-                           train_iters=train_iters,
-                           anisotropic_T=anisotropic_T, verbose=verbose)
-    else:
-        C = np.asarray(codebook, np.float32)
-    assignments = assign_shards(X, C, spill_mode=spill_mode, lam=lam,
-                                n_spills=n_spills, shard_size=shard_size,
-                                chunk=chunk, verbose=verbose)
+    with _phase(timings, "kmeans"):
+        if codebook is None:
+            C = train_codebook(kkm, X, n_partitions,
+                               train_sample=train_sample,
+                               train_iters=train_iters,
+                               anisotropic_T=anisotropic_T, init=init,
+                               batch_size=batch_size, verbose=verbose)
+        else:
+            C = np.asarray(codebook, np.float32)
+    with _phase(timings, "spill_assign"):
+        assignments = assign_shards(X, C, spill_mode=spill_mode, lam=lam,
+                                    n_spills=n_spills, shard_size=shard_size,
+                                    chunk=chunk, verbose=verbose)
     return finalize_ivf(kpq, X, C, assignments, pq_subspaces=pq_subspaces,
-                        rerank=rerank, spill_mode=spill_mode, lam=lam, pq=pq)
+                        rerank=rerank, spill_mode=spill_mode, lam=lam, pq=pq,
+                        timings=timings)

@@ -13,6 +13,9 @@ is also the layout that streams HBM→VMEM efficiently.
 """
 from __future__ import annotations
 
+import functools
+import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Optional
 
@@ -20,9 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kmeans import train_kmeans, assign_euclidean_topk
-from repro.core.soar import soar_assign, soar_assign_multi, naive_spill_assign
-from repro.quant.pq import PQCodebook, train_pq, pq_encode
+from repro.core.kmeans import train_kmeans
+from repro.kernels.soar_assign import assign_fused
+from repro.core.soar import soar_assign
+from repro.quant.pq import (PQCodebook, PQ_TRAIN_SAMPLE, train_pq, pq_encode,
+                            _encode_block)
 from repro.quant.int8 import Int8Data, int8_quantize
 from repro.quant.anisotropic import anisotropic_kmeans, eta_from_threshold
 
@@ -66,68 +71,172 @@ class IVFIndex:
         )
 
 
+@contextmanager
+def _phase(timings: Optional[dict], name: str):
+    """Accumulate the block's wall seconds into timings[name] (no-op when
+    timings is None) — the single instrumentation point for the per-phase
+    benchmark rows, so a phase can never be attributed to the wrong row."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        if timings is not None:
+            timings[name] = (timings.get(name, 0.0)
+                             + time.perf_counter() - t0)
+
+
+def _stable_counting_sort(flat_part: np.ndarray, c: int) -> np.ndarray:
+    """O(N) stable counting-sort permutation of small-int keys.
+
+    scipy's coo→csr conversion IS a counting sort (bincount + cumsum
+    offsets + one linear scatter in C) and preserves input order within
+    each row; with `data = arange(N)` its CSR data array is exactly the
+    stable sort permutation. Falls back to numpy's stable argsort (radix
+    for ints) when scipy is unavailable — bitwise-identical either way
+    (pinned in tests/test_build_perf.py).
+    """
+    N = flat_part.shape[0]
+    if N == 0:
+        return np.empty((0,), np.int64)
+    try:
+        import scipy.sparse as sp
+    except ImportError:
+        return np.argsort(flat_part, kind="stable")
+    coo = sp.coo_matrix(
+        (np.arange(N, dtype=np.int64),
+         (flat_part, np.arange(N, dtype=np.int64))), shape=(c, N))
+    return coo.tocsr().data
+
+
 def _csr_from_assignments(assignments: np.ndarray, c: int):
     """(n, a) assignment matrix → CSR (starts, point_ids, assign_col)."""
     n, a = assignments.shape
     flat_part = assignments.reshape(-1)                      # (n*a,)
-    flat_pid = np.repeat(np.arange(n, dtype=np.int32), a)
-    order = np.argsort(flat_part, kind="stable")
-    sorted_part = flat_part[order]
-    point_ids = flat_pid[order]
-    counts = np.bincount(sorted_part, minlength=c)
+    order = _stable_counting_sort(flat_part, c)
+    point_ids = (order // a).astype(np.int32)                # flat id = i*a+j
+    counts = np.bincount(flat_part, minlength=c)
     starts = np.zeros(c + 1, dtype=np.int64)
     np.cumsum(counts, out=starts[1:])
     return starts, point_ids, order
 
 
-# train_pq's own subsample cap — finalize_ivf replicates its selection so the
-# streamed path is bitwise-identical to the old materialize-everything path
-PQ_TRAIN_SAMPLE = 100_000
+# PQ_TRAIN_SAMPLE (re-exported from quant/pq.py): finalize_ivf mirrors
+# train_pq's own subsample cap so the streamed path selects the same rows
+# the materialize-everything path would
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _encode_residuals_fused(centers, Xd, Cd, pids, parts, chunk: int):
+    """One-pass streamed residual encode: CSR gather + subtract + PQ encode
+    fused in a single scan — no per-chunk host round-trips, nothing
+    materialized beyond one (chunk, d) tile."""
+    na = pids.shape[0]
+    m, k, s = centers.shape
+    pad = (-na) % chunk
+    pid_t = jnp.pad(pids, (0, pad)).reshape(-1, chunk)
+    part_t = jnp.pad(parts, (0, pad)).reshape(-1, chunk)
+
+    def body(_, inp):
+        pid, prt = inp
+        res = Xd[pid] - Cd[prt]                       # (chunk, d) on device
+        return None, _encode_block(centers, res.reshape(chunk, m, s))
+
+    _, codes = jax.lax.scan(body, None, (pid_t, part_t))
+    return codes.reshape(-1, m)[:na]
+
+
+@jax.jit
+def _gather_residuals(Xd, Cd, pids, parts):
+    return Xd[pids] - Cd[parts]
 
 
 def finalize_ivf(kpq, X, C, assignments: np.ndarray, *, pq_subspaces: int = 0,
                  rerank: str = "f32", spill_mode: str = "soar",
                  lam: float = 1.0, pq: Optional[PQCodebook] = None,
-                 encode_chunk: int = 65_536) -> IVFIndex:
+                 encode_chunk: int = 16_384,
+                 fused_encode: Optional[bool] = None,
+                 timings: Optional[dict] = None) -> IVFIndex:
     """CSR + residual-PQ + rerank assembly shared by every build path
     (monolithic `build_ivf`, sharded `core/build.py`, mutation compaction).
 
-    All per-assignment float work (residual gather + PQ encode) streams in
-    `encode_chunk` tiles, so accelerator peak stays O(encode_chunk·d) no
-    matter how large the index; only integer CSR arrays and the host-side
-    dataset are O(n). When `pq` is passed the codebook is FROZEN (the
-    incremental-insert contract, DESIGN.md §3.7): only encoding runs.
+    Residual encoding has two routes, bitwise-identical (pinned in
+    tests/test_build_perf.py):
+
+    - `fused_encode=True`: ONE jit'd scan fuses the CSR gather + residual
+      subtract + PQ encode with no per-chunk host round-trips. It keeps X
+      and the id arrays DEVICE-resident, so device peak is O(n·d) — free
+      on CPU (host == device), a real constraint on accelerators;
+    - `fused_encode=False`: the chunked host-loop reference — per-tile
+      host gather + `pq_encode` call; device peak O(encode_chunk·d)
+      however large the index.
+
+    The default (None) picks the fused route on CPU or when X is small
+    enough to sit on-device comfortably, the streamed route otherwise —
+    preserving `build_ivf_sharded`'s O(shard) accelerator-memory story.
+    When `pq` is passed the codebook is FROZEN (the incremental-insert
+    contract, DESIGN.md §3.7): only encoding runs.
+
+    `timings`, when given, collects per-phase wall seconds (csr, pq_train,
+    encode, rerank) for the benchmark's phase rows.
     """
     Xh = np.asarray(X, np.float32)
-    Ch = np.asarray(C, np.float32)
-    assignments = np.asarray(assignments, np.int32)
-    n = Xh.shape[0]
-    starts, point_ids, order = _csr_from_assignments(assignments,
-                                                     Ch.shape[0])
+    if fused_encode is None:
+        fused_encode = (jax.default_backend() == "cpu"
+                        or Xh.size <= (1 << 26))      # ≤256MB f32 on-device
+    with _phase(timings, "csr"):
+        Ch = np.asarray(C, np.float32)
+        assignments = np.asarray(assignments, np.int32)
+        n = Xh.shape[0]
+        starts, point_ids, order = _csr_from_assignments(assignments,
+                                                         Ch.shape[0])
     codes = None
     if pq is not None or pq_subspaces > 0:
         # residuals w.r.t. the centroid of EACH assignment, in CSR order
         flat_part = assignments.reshape(-1)[order]
+        if fused_encode:    # device-resident gather sources (CPU: no copy)
+            Xd = jnp.asarray(Xh)
+            Cd = jnp.asarray(Ch)
+            pid_d = jnp.asarray(point_ids)
+            part_d = jnp.asarray(flat_part)
         if pq is None:
-            na = point_ids.shape[0]
-            if na > PQ_TRAIN_SAMPLE:   # mirror train_pq's internal sampling
-                sel = np.asarray(jax.random.choice(
-                    kpq, na, (PQ_TRAIN_SAMPLE,), replace=False))
+            with _phase(timings, "pq_train"):
+                na = point_ids.shape[0]
+                if na > PQ_TRAIN_SAMPLE:   # mirror train_pq's own sampling
+                    sel = jax.random.choice(kpq, na, (PQ_TRAIN_SAMPLE,),
+                                            replace=False)
+                    if fused_encode:
+                        res = _gather_residuals(Xd, Cd, pid_d[sel],
+                                                part_d[sel])
+                    else:
+                        sel = np.asarray(sel)
+                        res = jnp.asarray(Xh[point_ids[sel]]
+                                          - Ch[flat_part[sel]])
+                elif fused_encode:
+                    res = _gather_residuals(Xd, Cd, pid_d, part_d)
+                else:
+                    res = jnp.asarray(Xh[point_ids] - Ch[flat_part])
+                pq = train_pq(kpq, res, pq_subspaces)
+        with _phase(timings, "encode"):
+            m = pq.centers.shape[0]
+            if point_ids.shape[0] == 0:
+                codes = np.zeros((0, m), np.uint8)
+            elif fused_encode:
+                codes = np.asarray(_encode_residuals_fused(
+                    pq.centers, Xd, Cd, pid_d, part_d, encode_chunk))
             else:
-                sel = slice(None)
-            res = Xh[point_ids[sel]] - Ch[flat_part[sel]]
-            pq = train_pq(kpq, jnp.asarray(res), pq_subspaces)
-        parts_out = []
-        for i in range(0, point_ids.shape[0], encode_chunk):
-            res = (Xh[point_ids[i:i + encode_chunk]]
-                   - Ch[flat_part[i:i + encode_chunk]])
-            parts_out.append(np.asarray(pq_encode(pq, jnp.asarray(res))))
-        m = pq.centers.shape[0]
-        codes = (np.concatenate(parts_out) if parts_out
-                 else np.zeros((0, m), np.uint8))
+                # reference: per-chunk host gather + pq_encode round-trips
+                parts_out = []
+                for i in range(0, point_ids.shape[0], encode_chunk):
+                    res = (Xh[point_ids[i:i + encode_chunk]]
+                           - Ch[flat_part[i:i + encode_chunk]])
+                    parts_out.append(
+                        np.asarray(pq_encode(pq, jnp.asarray(res))))
+                codes = np.concatenate(parts_out)
 
-    rerank_int8 = int8_quantize(jnp.asarray(Xh)) if rerank == "int8" else None
-    rerank_f32 = Xh if rerank == "f32" else None
+    with _phase(timings, "rerank"):
+        rerank_int8 = (int8_quantize(jnp.asarray(Xh))
+                       if rerank == "int8" else None)
+        rerank_f32 = Xh if rerank == "f32" else None
 
     return IVFIndex(
         centroids=Ch, starts=starts, point_ids=point_ids,
@@ -138,43 +247,61 @@ def finalize_ivf(kpq, X, C, assignments: np.ndarray, *, pq_subspaces: int = 0,
 def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
               lam: float = 1.0, n_spills: int = 1, pq_subspaces: int = 0,
               rerank: str = "f32", train_iters: int = 15,
-              anisotropic_T: float = 0.0, verbose: bool = False) -> IVFIndex:
+              anisotropic_T: float = 0.0, verbose: bool = False,
+              init: str = "pp", batch_size: Optional[int] = None,
+              timings: Optional[dict] = None) -> IVFIndex:
     """Train VQ + (optionally) spilled assignments + PQ, build the index.
 
     spill_mode: "none" (plain IVF), "naive" (2nd-closest centroid),
     "soar" (the paper's loss). PQ codes encode the residual w.r.t. the
     assignment's own centroid (duplicated per assignment, per Figure 5).
 
-    This is the monolithic single-host path (Lloyd iterations over the full
+    This is the monolithic single-host path (Lloyd sweeps over the full
     dataset). For O(shard) peak memory and sample-trained codebooks, see
-    `core/build.py::build_ivf_sharded`.
+    `core/build.py::build_ivf_sharded`. Primary + spill assignments run
+    through the SAME fused kernel as the sharded path
+    (`kernels/soar_assign.py::assign_fused`) — one shared X·Cᵀ GEMM, no
+    separate train-then-spill passes. `init`/`batch_size` expose the
+    flagged k-means|| / mini-batch training modes (exact path default).
     """
+    from repro.core.build import spill_plan
+
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
     kkm, kpq = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
 
-    if anisotropic_T > 0.0:
-        eta = eta_from_threshold(anisotropic_T, d)
-        C, primary = anisotropic_kmeans(kkm, X, n_partitions, eta,
-                                        iters=max(4, train_iters // 3))
-    else:
-        km = train_kmeans(kkm, X, n_partitions, iters=train_iters, verbose=verbose)
-        C, primary = km.centroids, km.assignments
-
-    if spill_mode == "none":
-        assignments = np.asarray(primary)[:, None]
-    elif spill_mode == "naive":
-        sec = naive_spill_assign(X, C, primary)
-        assignments = np.stack([np.asarray(primary), np.asarray(sec)], axis=1)
-    elif spill_mode == "soar":
-        if n_spills == 1:
-            sec = soar_assign(X, C, primary, lam=lam)
-            assignments = np.stack([np.asarray(primary), np.asarray(sec)], axis=1)
+    with _phase(timings, "kmeans"):
+        if anisotropic_T > 0.0:
+            eta = eta_from_threshold(anisotropic_T, d)
+            C, primary = anisotropic_kmeans(kkm, X, n_partitions, eta,
+                                            iters=max(4, train_iters // 3))
         else:
-            assignments = np.asarray(
-                soar_assign_multi(X, C, primary, lam=lam, n_spills=n_spills))
-    else:
-        raise ValueError(spill_mode)
+            km = train_kmeans(kkm, X, n_partitions, iters=train_iters,
+                              verbose=verbose, init=init,
+                              batch_size=batch_size, final_assign=False)
+            C, primary = km.centroids, None
+
+    with _phase(timings, "spill_assign"):
+        if primary is not None:
+            # anisotropic primaries are score-aware (not the Euclidean
+            # argmin), so spills must build on the given primary column
+            if spill_mode == "none":
+                assignments = np.asarray(primary)[:, None]
+            else:
+                eff_lam, _ = spill_plan(spill_mode, lam, n_spills)
+                if spill_mode != "soar" or n_spills == 1:
+                    sec = soar_assign(X, C, primary, lam=eff_lam)
+                    assignments = np.stack(
+                        [np.asarray(primary), np.asarray(sec)], axis=1)
+                else:
+                    from repro.core.soar import soar_assign_multi
+                    assignments = np.asarray(soar_assign_multi(
+                        X, C, primary, lam=lam, n_spills=n_spills))
+        else:
+            eff_lam, eff_spills = spill_plan(spill_mode, lam, n_spills)
+            assignments = np.asarray(assign_fused(X, C, lam=eff_lam,
+                                                  n_spills=eff_spills))
 
     return finalize_ivf(kpq, X, C, assignments, pq_subspaces=pq_subspaces,
-                        rerank=rerank, spill_mode=spill_mode, lam=lam)
+                        rerank=rerank, spill_mode=spill_mode, lam=lam,
+                        timings=timings)

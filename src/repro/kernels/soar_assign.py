@@ -123,30 +123,41 @@ def _fused_assign_gemm(X, C, lam: float, n_spills: int, chunk: int):
     orthogonality penalty, so the full multi-spill objective of
     `soar_assign_multi` is preserved. Total 1 + n_spills GEMM passes over
     the data vs 2 + 2·n_spills for the unfused train-then-spill sequence.
+
+    The codebook is column-padded to the argmin group width with
+    ||c||² = +inf sentinels (never selected) and argmins run through the
+    grouped exact reduction of kernels/lloyd.py — identical indices to
+    `jnp.argmin` (pinned against the core/soar.py compositions in
+    tests/test_build.py), ~1.8x faster on XLA:CPU.
     """
+    from repro.kernels.lloyd import ARGMIN_GROUP, _grouped_argmin
     from repro.utils import chunked_map
 
-    cn = jnp.sum(C * C, axis=-1)
     c = C.shape[0]
+    cpad = (-c) % ARGMIN_GROUP
+    Cp = jnp.pad(C, ((0, cpad), (0, 0)))
+    Ct = Cp.T
+    cn = jnp.pad(jnp.sum(C * C, axis=-1), (0, cpad),
+                 constant_values=jnp.inf)
 
     def f(xb):
-        xc = xb @ C.T                                       # shared GEMM
-        prim = jnp.argmin(cn[None, :] - 2.0 * xc, axis=-1).astype(jnp.int32)
+        xc = xb @ Ct                                        # shared GEMM
+        prim, _ = _grouped_argmin(cn[None, :] - 2.0 * xc)
         assigns = [prim]
-        used = jax.nn.one_hot(prim, c, dtype=bool)
+        used = jax.nn.one_hot(prim, c + cpad, dtype=bool)
         pen = jnp.zeros_like(xc)
         for _ in range(n_spills):
-            r = xb - C[assigns[-1]]
+            r = xb - Cp[assigns[-1]]
             rn = jnp.linalg.norm(r, axis=-1, keepdims=True)
             rhat = r / jnp.maximum(rn, 1e-12)
-            rc = rhat @ C.T                                 # one GEMM / spill
+            rc = rhat @ Ct                                  # one GEMM / spill
             rx = jnp.sum(rhat * xb, axis=-1)
             pen = pen + (rx[:, None] - rc) ** 2
             loss = cn[None, :] - 2.0 * xc + lam * pen
             loss = jnp.where(used, jnp.inf, loss)
-            nxt = jnp.argmin(loss, axis=-1).astype(jnp.int32)
+            nxt, _ = _grouped_argmin(loss)
             assigns.append(nxt)
-            used = used | jax.nn.one_hot(nxt, c, dtype=bool)
+            used = used | jax.nn.one_hot(nxt, c + cpad, dtype=bool)
         return jnp.stack(assigns, axis=1)
 
     return chunked_map(f, X.astype(jnp.float32), chunk)

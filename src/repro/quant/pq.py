@@ -5,6 +5,16 @@ SIMD"); on TPU the same codebook shape is chosen for VMEM-residency + one-hot
 MXU contraction (see kernels/pq_score.py). Codes are uint8 (one code < 16 per
 subspace; we keep one byte per subspace for simplicity of layout — the memory
 MODEL in benchmarks uses the paper's 4-bit accounting).
+
+Training runs all m subspaces JOINTLY: one vmapped k-means++ init and one
+batched fused Lloyd sweep per iteration over the (m, sample, s) tensor,
+instead of m sequential host-looped `train_kmeans` calls — same keys, same
+per-iteration early-stop decisions, bitwise-identical codebooks (the
+sequential reference is kept as `train_pq_sequential` and pinned in
+tests/test_build_perf.py). Scope of the bitwise claim: it holds on the
+scan sweep route (CPU/GPU); on TPU `train_kmeans` dispatches the Pallas
+one-hot-MXU accumulate whose f32 accumulation grouping differs from the
+batched scan, so there the two trainers agree to rounding, not bits.
 """
 from __future__ import annotations
 
@@ -13,31 +23,150 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.kmeans import train_kmeans
+from repro.kernels.lloyd import _grouped_argmin, lloyd_sweep_batched
 from repro.utils import chunked_map
+
+# NOTE: repro.core.kmeans is imported lazily inside the training functions —
+# core/ivf.py (pulled in by the repro.core package init) imports this module,
+# so a top-level import here would be circular when repro.quant loads first.
+
+# max chunk of the per-subspace Lloyd sweeps; divides the default training
+# sample evenly (chunking changes only f32 accumulation grouping — both the
+# batched and the sequential-reference paths use the same `_sweep_chunk`)
+PQ_KMEANS_CHUNK = 16_384
+
+
+def _sweep_chunk(n: int) -> int:
+    """Even sweep tiling for n rows: smallest chunk <= PQ_KMEANS_CHUNK with
+    the same tile count, rounded to 256 — a lopsided last tile is computed
+    in full (padding is masked but not free), so e.g. 18k rows tile as
+    2x9216 instead of 2x16384 (45% wasted lanes)."""
+    nch = -(-n // PQ_KMEANS_CHUNK)
+    return min(PQ_KMEANS_CHUNK, -(-(-(-n // nch)) // 256) * 256)
+_INIT_SAMPLE = 50_000
+
+# Default PQ training sample. 16 centers in a d/m-dim subspace saturate far
+# below this (2k points/center at m=25, d=100); recall-after-build is
+# unchanged vs the former 100k default (gated at Δ<=0.005 by the CI
+# regression check) while the batched training sweep runs ~3x faster.
+PQ_TRAIN_SAMPLE = 32_768
 
 
 class PQCodebook(NamedTuple):
     centers: jax.Array   # (m, 16, s) float32 — m subspaces, 16 centers, s dims
 
 
+@functools.partial(jax.jit, static_argnames=("n_centers",))
+def _pp_init_batched(keys, Xm, n_centers: int):
+    """vmapped k-means++ over the m subspaces (same keys as sequential)."""
+    from repro.core.kmeans import kmeans_pp_init
+    return jax.vmap(lambda k, x: kmeans_pp_init(k, x, n_centers))(keys, Xm)
+
+
+def _subspace_keys(key, m: int):
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(m))
+
+
 def train_pq(key, X, n_subspaces: int, n_centers: int = 16, iters: int = 8,
-             sample: int = 100_000) -> PQCodebook:
-    """Train per-subspace k-means codebooks on (a sample of) X."""
+             sample: int = PQ_TRAIN_SAMPLE, tol: float = 1e-5,
+             init_sample: int = _INIT_SAMPLE) -> PQCodebook:
+    """Train per-subspace k-means codebooks on (a sample of) X — batched.
+
+    All m subspaces advance together: one (m, n, s) batched sweep per
+    iteration, with a host-side per-subspace active mask replicating the
+    sequential early-stop schedule exactly (a converged subspace's
+    centroids freeze while the rest keep iterating).
+    """
+    from repro.core.kmeans import _stopped
+    n, d = X.shape
+    assert d % n_subspaces == 0, (d, n_subspaces)
+    m, s = n_subspaces, d // n_subspaces
+    X = jnp.asarray(X, jnp.float32)
+    if n > sample:
+        sel = jax.random.choice(key, n, (sample,), replace=False)
+        X = X[sel]
+        n = sample
+    Xm = jnp.transpose(X.reshape(n, m, s), (1, 0, 2))      # (m, n, s)
+
+    keys = _subspace_keys(key, m)
+    kinits = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
+    if n > init_sample:
+        isel = jax.vmap(lambda k: jax.random.choice(
+            k, n, (init_sample,), replace=False))(kinits)
+        Xi = jax.vmap(lambda x, i: x[i])(Xm, isel)
+    else:
+        Xi = Xm
+    C = _pp_init_batched(kinits, Xi, n_centers)
+
+    active = np.ones(m, bool)
+    prev = np.full(m, np.inf)
+    chunk = _sweep_chunk(n)
+    for _ in range(iters):
+        newC, _, dist = lloyd_sweep_batched(Xm, C, n_centers, chunk=chunk)
+        act = jnp.asarray(active)
+        C = jnp.where(act[:, None, None], newC, C)
+        dvals = np.asarray(dist)
+        for j in np.nonzero(active)[0]:
+            dj = float(dvals[j])
+            if _stopped(prev[j], dj, tol):
+                active[j] = False
+            else:
+                prev[j] = dj
+        if not active.any():
+            break
+    return PQCodebook(C)
+
+
+def train_pq_sequential(key, X, n_subspaces: int, n_centers: int = 16,
+                        iters: int = 8, sample: int = PQ_TRAIN_SAMPLE,
+                        init_sample: int = _INIT_SAMPLE) -> PQCodebook:
+    """Reference: m host-looped `train_kmeans` calls (the pre-batching
+    implementation). Kept for the bitwise-equality pin against the batched
+    `train_pq` — both must produce identical codebooks at the same keys."""
+    from repro.core.kmeans import train_kmeans
     n, d = X.shape
     assert d % n_subspaces == 0, (d, n_subspaces)
     s = d // n_subspaces
     if n > sample:
         sel = jax.random.choice(key, n, (sample,), replace=False)
-        X = X[sel]
-    Xs = X.reshape(-1, n_subspaces, s)
+        X = jnp.asarray(X, jnp.float32)[sel]
+    Xs = jnp.asarray(X, jnp.float32).reshape(-1, n_subspaces, s)
     cents = []
     for m in range(n_subspaces):
         km = train_kmeans(jax.random.fold_in(key, m), Xs[:, m, :], n_centers,
-                          iters=iters, chunk=32768)
+                          iters=iters, chunk=_sweep_chunk(Xs.shape[0]),
+                          init_sample=init_sample)
         cents.append(km.centroids)
     return PQCodebook(jnp.stack(cents))
+
+
+def _encode_block(centers, xb):
+    """(chunk, m, s) residual tile → (chunk, m) uint8 codes.
+
+    Shared by `pq_encode` and the fused finalize encoder so every encode
+    path resolves distances (and argmin ties) identically. The per-point
+    ||x||^2 term is constant per (row, subspace) and dropped — it cannot
+    change the argmin, including ties (both paths drop it). Small subspace
+    dims contract as an unrolled multiply-add chain (one fused elementwise
+    pass, no batch-transposed tiny-k GEMM dispatches — see
+    kernels/lloyd.py::SMALL_D)."""
+    from repro.kernels.lloyd import ARGMIN_GROUP, SMALL_D
+    m, k, s = centers.shape
+    cn = jnp.sum(centers * centers, axis=-1)
+    if s <= SMALL_D:
+        ip = xb[:, :, 0, None] * centers[None, :, :, 0]
+        for j in range(1, s):
+            ip = ip + xb[:, :, j, None] * centers[None, :, :, j]
+    else:
+        ip = jnp.einsum("bms,mks->bmk", xb, centers)
+    dm = cn[None] - 2.0 * ip
+    if k % ARGMIN_GROUP:           # pad center axis with never-chosen +inf
+        dm = jnp.pad(dm, ((0, 0), (0, 0), (0, (-k) % ARGMIN_GROUP)),
+                     constant_values=jnp.inf)
+    idx, _ = _grouped_argmin(dm)
+    return idx.astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
@@ -50,15 +179,7 @@ def pq_encode(cb: PQCodebook, X, chunk: int = 16384) -> jax.Array:
     n, d = X.shape
     m, k, s = cb.centers.shape
     Xs = X.reshape(n, m, s)
-
-    def f(xb):
-        # (chunk, m, s) vs (m, k, s) → distances (chunk, m, k)
-        d2 = (jnp.sum(xb * xb, -1)[..., None]
-              - 2.0 * jnp.einsum("bms,mks->bmk", xb, cb.centers)
-              + jnp.sum(cb.centers * cb.centers, -1)[None])
-        return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
-
-    return chunked_map(f, Xs, chunk)
+    return chunked_map(lambda xb: _encode_block(cb.centers, xb), Xs, chunk)
 
 
 @jax.jit
