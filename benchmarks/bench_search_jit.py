@@ -6,6 +6,11 @@ the t·pmax candidate window. This bench times both pipelines on the same
 packed index (n=100k, nq=256, CPU) and reports the speedup and recall@10 —
 the win must be ≥ 3x with recall unchanged (±0.002).
 
+ISSUE 5 adds filtered-serving rows (DESIGN.md §3.9): subset search at
+selectivities {0.9, 0.5, 0.1, 0.01} on both engines, with recall measured
+against FILTERED exact search (the only honest comparator — unfiltered
+ground truth is unreachable by definition once a filter applies).
+
     PYTHONPATH=src python -m benchmarks.bench_search_jit [--smoke]
 
 `--smoke` runs a scaled-down shape (n=10k, nq=32) as a CI sanity check.
@@ -77,13 +82,20 @@ def recall_at(ids: np.ndarray, tn: np.ndarray, k: int = 10) -> float:
     return float((ids[:, :k, None] == tn[:, None, :k]).any(-1).mean())
 
 
-def run(n: int, nq: int, c: int, top_t: int, rerank_budget: int,
-        train_iters: int, label: str):
+def _setup(n: int, nq: int, c: int, train_iters: int):
+    """Shared dataset+index build for run()/run_filtered() — the same
+    (seeded) build, so main() pays the multi-minute 100k Lloyd+PQ pass
+    once, not per section."""
     ds = glove_like(n=n, d=100, nq=nq)
-    tn = true_neighbors(ds.X, ds.Q, k=10)
     idx = build_ivf(jax.random.PRNGKey(1), ds.X, c, spill_mode="soar",
                     pq_subspaces=25, train_iters=train_iters)
-    packed = pack_ivf(idx)
+    return ds, idx, pack_ivf(idx)
+
+
+def run(n: int, nq: int, c: int, top_t: int, rerank_budget: int,
+        train_iters: int, label: str, prebuilt=None):
+    ds, idx, packed = prebuilt or _setup(n, nq, c, train_iters)
+    tn = true_neighbors(ds.X, ds.Q, k=10)
     Q = jnp.asarray(ds.Q)
     kw = dict(top_t=top_t, final_k=10, rerank_budget=rerank_budget)
 
@@ -107,18 +119,56 @@ def run(n: int, nq: int, c: int, top_t: int, rerank_budget: int,
     return speedup, r_new, r_seed
 
 
+def run_filtered(n: int, nq: int, c: int, top_t: int, rerank_budget: int,
+                 train_iters: int, label: str,
+                 sels=(0.9, 0.5, 0.1, 0.01), prebuilt=None):
+    """Filtered-serving rows: per selectivity, time the filtered jit path
+    (with its fixed escalation pass) and the host engine (with its
+    host-driven escalation loop); recall is vs FILTERED exact search."""
+    from repro.core import search_numpy
+    ds, idx, packed = prebuilt or _setup(n, nq, c, train_iters)
+    Q = jnp.asarray(ds.Q)
+    rng = np.random.default_rng(0)
+    kw = dict(top_t=top_t, final_k=10, rerank_budget=rerank_budget)
+    for sel in sels:
+        mask = rng.random(n) < sel
+        alive = np.flatnonzero(mask)
+        tn = alive[np.asarray(true_neighbors(ds.X[alive], ds.Q, k=10))]
+        f = jnp.asarray(mask.astype(np.uint8))
+        jids, _ = search_jit(packed, Q, filter=f, **kw)      # compile+warm
+        t_jit = _time(lambda: search_jit(packed, Q, filter=f, **kw))
+        np_res = {}                 # ids from a TIMED call — a 4th untimed
+                                    # run can be a near-full scan at s=0.01
+        t_np = _time(lambda: np_res.setdefault(
+            "ids", search_numpy(idx, ds.Q, filter_mask=mask, **kw)[0]),
+            reps=3)
+        nids = np_res["ids"]
+        emit(f"search_jit_filtered_s{sel}_{label}", t_jit / nq,
+             f"recall@10={recall_at(np.asarray(jids), tn):.3f} "
+             f"selectivity={sel} (vs filtered exact)")
+        emit(f"search_numpy_filtered_s{sel}_{label}", t_np / nq,
+             f"recall@10={recall_at(nids, tn):.3f} "
+             f"selectivity={sel} (vs filtered exact)")
+
+
 def main(smoke: bool = False, out: str = ""):
     from benchmarks import common
     mark = len(common.ROWS)
     if smoke:
+        pre = _setup(n=10_000, nq=32, c=64, train_iters=3)
         run(n=10_000, nq=32, c=64, top_t=6, rerank_budget=256,
-            train_iters=3, label="smoke")
+            train_iters=3, label="smoke", prebuilt=pre)
+        run_filtered(n=10_000, nq=32, c=64, top_t=6, rerank_budget=256,
+                     train_iters=3, label="smoke", prebuilt=pre)
     else:
+        pre = _setup(n=100_000, nq=256, c=500, train_iters=8)
         speedup, r_new, r_seed = run(n=100_000, nq=256, c=500, top_t=10,
                                      rerank_budget=300, train_iters=8,
-                                     label="100k")
+                                     label="100k", prebuilt=pre)
         assert speedup >= 3.0, f"speedup {speedup:.2f}x < 3x acceptance bar"
         assert abs(r_new - r_seed) <= 0.002, (r_new, r_seed)
+        run_filtered(n=100_000, nq=256, c=500, top_t=10, rerank_budget=300,
+                     train_iters=8, label="100k", prebuilt=pre)
     if out:
         from benchmarks.common import write_rows
         write_rows(out, common.ROWS[mark:], smoke=smoke)

@@ -189,17 +189,57 @@ def sharded_ivf_pq_pspecs(axes: Tuple[str, ...]) -> ShardedIVFPQ:
     return ShardedIVFPQ(P(a), P(a), P(a), P(a), P(a), P(a), P(a))
 
 
+def stack_filters(masks, n_local_max: Optional[int] = None) -> jax.Array:
+    """Per-shard LOCAL-id filter bitmaps → (D, nmax) uint8, zero-padded.
+
+    Padded local ids never appear in any partition slot, and a 0 bit only
+    re-masks them, so over-padding is harmless. Feed the result to the
+    filtered distributed search paths (sharded like the index arrays).
+    """
+    masks = [np.asarray(m).astype(np.uint8).ravel() for m in masks]
+    nmax = int(n_local_max or max(m.shape[0] for m in masks))
+    out = np.zeros((len(masks), nmax), np.uint8)
+    for i, m in enumerate(masks):
+        out[i, :m.shape[0]] = m
+    return jnp.asarray(out)
+
+
+def shard_filters(global_mask, n_locals) -> jax.Array:
+    """Split a GLOBAL-id bitmap into the stacked per-shard local layout.
+
+    Global ids are the cumulative-base globalization of shard-local ids
+    (ShardedIVF.local_base), so shard s's slice is simply
+    global_mask[base_s : base_s + n_local_s].
+    """
+    gm = np.asarray(global_mask).astype(np.uint8).ravel()
+    total = int(sum(n_locals))
+    assert gm.shape[0] == total, (
+        f"global mask covers {gm.shape[0]} ids but shards hold {total} — "
+        f"a short mask would silently zero-fill (exclude) trailing shards")
+    out, off = [], 0
+    for nl in n_locals:
+        out.append(gm[off:off + nl])
+        off += nl
+    return stack_filters(out)
+
+
 def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
-                            final_k: int, multiplicity: int = 2):
+                            final_k: int, multiplicity: int = 2,
+                            with_filter: bool = False):
     """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global.
 
     Pass multiplicity ≥ 1 + n_spills when serving multi-spill shards
     (dedup_topk_window's correctness bound); default 2 covers the
     single-spill "naive"/"soar" builds.
+
+    with_filter=True: the returned fn takes a third argument — a (D, n_local)
+    uint8 LOCAL-id bitmap (stack_filters / shard_filters), sharded like the
+    index — and masks candidates per gathered window before dedup, exactly
+    the §3.9 subset semantics of the single-host engines.
     """
     from jax.experimental.shard_map import shard_map
 
-    def local_search(ivf: ShardedIVF, Q):
+    def local_search(ivf: ShardedIVF, Q, filt=None):
         # leading shard dim is size 1 inside shard_map — squeeze it
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]
@@ -209,9 +249,12 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         # batched: one centroid GEMM, then candidate-local dedup — no
         # intermediate scales with the shard size (DESIGN.md §3.6)
         sc = Q @ C.T                                       # (nq, c)
-        _, parts = jax.lax.top_k(sc, top_t)
+        _, parts = jax.lax.top_k(sc, min(top_t, C.shape[0]))
         ids = part_ids[parts].reshape(Q.shape[0], -1)      # (nq, t·pmax) local
         valid = ids >= 0
+        if filt is not None:
+            valid = valid & (filt[0][jnp.maximum(ids, 0)] > 0)
+            ids = jnp.where(valid, ids, -1)    # filtered ≡ padding for dedup
         scores = jnp.einsum("qwd,qd->qw", rerank[jnp.maximum(ids, 0)], Q)
         scores = jnp.where(valid, scores, -jnp.inf)
         ids, vals = dedup_topk_window(ids, scores, final_k, multiplicity)
@@ -235,14 +278,20 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         return jnp.take_along_axis(flat_i, pos, axis=1), v
 
     spec = sharded_ivf_pspecs(axes)
-    return shard_map(local_search, mesh=mesh,
+    a = axes if len(axes) > 1 else axes[0]
+    if with_filter:
+        return shard_map(local_search, mesh=mesh,
+                         in_specs=(spec, P(), P(a)), out_specs=(P(), P()),
+                         check_rep=False)
+    return shard_map(lambda ivf, Q: local_search(ivf, Q), mesh=mesh,
                      in_specs=(spec, P()), out_specs=(P(), P()),
                      check_rep=False)
 
 
 def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
                                final_k: int, rerank_k: int = 256,
-                               q_chunk: int = 128, multiplicity: int = 2):
+                               q_chunk: int = 128, multiplicity: int = 2,
+                               with_filter: bool = False):
     """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
 
     Per shard per q_chunk tile: batched centroid top-t → PQ-score the
@@ -252,27 +301,35 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
     rerank of only those from the float data → local top-k → global
     all_gather merge. Tiles stream through lax.map to bound the live
     candidate buffers (baseline peaked at 16 GiB gathering f32 candidates).
+
+    with_filter as in make_distributed_search: fn gains a (D, n_local)
+    uint8 local-id bitmap argument masking candidates pre-dedup.
     """
     from jax.experimental.shard_map import shard_map
 
-    def local_search(ivf: ShardedIVFPQ, Q):
+    def local_search(ivf: ShardedIVFPQ, Q, filt=None):
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]
         part_codes = ivf.part_codes[0]
         pqc = ivf.pq_centers[0]                   # (m, 16, s)
         rerank = ivf.rerank[0]
         base = ivf.local_base[0]
+        fbits = None if filt is None else filt[0]
         m = pqc.shape[0]
         s = pqc.shape[2]
         pmax = part_ids.shape[1]
+        tt = min(top_t, C.shape[0])
 
         def tile(Qb):                                      # (bq, d)
             sc = Qb @ C.T                                  # (bq, c)
-            psc, parts = jax.lax.top_k(sc, top_t)
+            psc, parts = jax.lax.top_k(sc, tt)
             bq = Qb.shape[0]
             ids = part_ids[parts].reshape(bq, -1)          # (bq, t·pmax)
             valid = ids >= 0
-            codes = part_codes[parts].reshape(bq, top_t * pmax, m)
+            if fbits is not None:
+                valid = valid & (fbits[jnp.maximum(ids, 0)] > 0)
+                ids = jnp.where(valid, ids, -1)
+            codes = part_codes[parts].reshape(bq, tt * pmax, m)
             luts = jnp.einsum("qms,mks->qmk", Qb.reshape(bq, m, s), pqc)
             approx = window_pq_scores(luts, codes)
             approx = approx + jnp.repeat(psc, pmax, axis=-1)
@@ -305,7 +362,12 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
         return jnp.take_along_axis(flat_i, pos, axis=1), v
 
     spec = sharded_ivf_pq_pspecs(axes)
-    return shard_map(local_search, mesh=mesh,
+    a = axes if len(axes) > 1 else axes[0]
+    if with_filter:
+        return shard_map(local_search, mesh=mesh,
+                         in_specs=(spec, P(), P(a)), out_specs=(P(), P()),
+                         check_rep=False)
+    return shard_map(lambda ivf, Q: local_search(ivf, Q), mesh=mesh,
                      in_specs=(spec, P()), out_specs=(P(), P()),
                      check_rep=False)
 

@@ -79,6 +79,7 @@ class MutableIVF:
     alive: np.ndarray                   # (cap_n,) bool
     n_total: int                        # high-water point id (append-only)
     n_dead_slots: int = 0
+    n_soft_deleted: int = 0             # alive=False but slots NOT blanked
     compact_threshold: float = 0.25
     _packed: Optional[PackedIVF] = field(default=None, repr=False)
     _packed_pair: Optional[bool] = field(default=None, repr=False)
@@ -87,6 +88,11 @@ class MutableIVF:
     # cached _packed was last synced; None marks "needs full repack"
     _dirty_parts: Optional[np.ndarray] = field(default=None, repr=False)
     _dirty_ids: int = field(default=0, repr=False)      # rerank rows synced
+    # standing-filter cache: device uint8 alive bitmap, keyed by an epoch
+    # bumped whenever `alive` mutates (add/remove)
+    _alive_epoch: int = field(default=0, repr=False)
+    _filter_dev: Optional[jax.Array] = field(default=None, repr=False)
+    _filter_epoch: int = field(default=-1, repr=False)
 
     # ------------------------------------------------------------ builders
     @classmethod
@@ -201,6 +207,7 @@ class MutableIVF:
         self.rerank[self.n_total:need] = X_new
         self.assignments[self.n_total:need] = A
         self.alive[self.n_total:need] = True
+        self._alive_epoch += 1
 
         # partition inserts: group the (b·a) flat entries by partition and
         # append each group at its partition's current fill offset
@@ -242,19 +249,41 @@ class MutableIVF:
             self._mark_dirty(np.unique(sp))
         return ids
 
-    def remove(self, ids: Sequence[int]) -> int:
+    def remove(self, ids: Sequence[int], hard: bool = True) -> int:
         """Tombstone a batch of point ids; returns how many were removed.
 
-        Slots blank to -1 (the search pipelines' existing padding sentinel)
-        — no data moves. Compaction runs automatically once the dead-slot
-        fraction crosses `compact_threshold`.
+        hard=True (default): slots blank to -1 (the search pipelines'
+        existing padding sentinel) — no data moves. Compaction runs
+        automatically once the dead-slot fraction crosses
+        `compact_threshold`.
+
+        hard=False: the point is only marked dead in the `alive` bitmap —
+        nothing else is touched, NO snapshot invalidation, no device
+        traffic. Soft tombstones are served through the standing filter
+        bitmap (`filter_bitmap()`; DESIGN.md §3.9 unifies them with user
+        subset filters), which every filter-aware search path ANDs in.
+        They are hardened lazily: any later hard `remove`/`compact` leaves
+        them in place, and `harden_soft_deletes()` converts them in one
+        batch when their slot waste starts to matter.
         """
         ids = np.unique(np.asarray(ids, np.int64))
         ids = ids[(ids >= 0) & (ids < self.n_total)]
         ids = ids[self.alive[ids]]
         if ids.size == 0:
             return 0
+        self._alive_epoch += 1
+        if not hard:
+            self.alive[ids] = False
+            self.n_soft_deleted += int(ids.size)
+            return int(ids.size)
         self.alive[ids] = False
+        self._blank_slots(ids)
+        return int(ids.size)
+
+    def _blank_slots(self, ids: np.ndarray):
+        """Hard-tombstone bookkeeping shared by remove(hard=True) and
+        harden_soft_deletes: blank the ids' partition slots to -1, retire
+        their assignment rows, mark dirty, maybe compact."""
         rows = np.unique(self.assignments[ids].reshape(-1))
         rows = rows[rows >= 0]
         sub = self.part_ids[rows]
@@ -265,7 +294,6 @@ class MutableIVF:
         self._mark_dirty(rows)
         if self.dead_fraction > self.compact_threshold:
             self.compact()
-        return int(ids.size)
 
     def compact(self):
         """Shift live slots left within each partition, dropping tombstones.
@@ -282,6 +310,83 @@ class MutableIVF:
         self.sizes = (self.part_ids >= 0).sum(axis=1).astype(np.int32)
         self.n_dead_slots = 0
         self._invalidate()
+
+    def harden_soft_deletes(self) -> int:
+        """Convert soft tombstones (alive=False, slots intact) into hard
+        ones (slots blanked to -1) in one batch — reclaims their probed-
+        window slots once filter masking alone wastes too many. Returns
+        how many were hardened; may trigger compaction."""
+        dead = np.flatnonzero(~self.alive[:self.n_total]
+                              & (self.assignments[:self.n_total, 0] >= 0))
+        self.n_soft_deleted = 0
+        if dead.size == 0:
+            return 0
+        self._blank_slots(dead)
+        return int(dead.size)
+
+    # ------------------------------------------------------------ filtering
+    @property
+    def standing_filter_thin(self) -> bool:
+        """True when the standing soft-tombstone filter is selective enough
+        (majority of ids dead) that probe escalation can plausibly help;
+        serving paths skip the fixed second escalation pass otherwise."""
+        return 2 * self.n_soft_deleted > self.n_total
+
+    def serving_filter(self, mask: Optional[np.ndarray] = None,
+                       ids: Optional[Sequence[int]] = None,
+                       escalate: bool = True):
+        """(device filter | None, escalate) plan for the jit serving
+        paths — the single source of truth for the standing-vs-user rule,
+        routed through by AnnEngine.search and KNNMemory.retrieve:
+
+        - no user subset → the CACHED standing bitmap (only if soft
+          tombstones exist), with escalation additionally gated on
+          `standing_filter_thin` (a fat tombstone filter can never trigger
+          escalation usefully, so don't pay its fixed second probe pass);
+        - user subset → a freshly composed + uploaded `filter_bitmap`,
+          escalation left to the caller's choice."""
+        if mask is None and ids is None:
+            if not self.n_soft_deleted:
+                return None, escalate
+            return (self.standing_filter(),
+                    escalate and self.standing_filter_thin)
+        return jnp.asarray(self.filter_bitmap(mask=mask, ids=ids)), escalate
+
+    def standing_filter(self) -> jax.Array:
+        """Cached DEVICE uint8 alive bitmap at capacity width — the
+        no-user-subset standing filter (soft tombstones). Rebuilt and
+        re-uploaded only when `alive` has mutated since the last call, so
+        steady-state serving with a standing filter pays zero per-search
+        host work or transfer."""
+        if (self._filter_dev is None
+                or self._filter_epoch != self._alive_epoch
+                or self._filter_dev.shape[0] != self.alive.shape[0]):
+            self._filter_dev = jnp.asarray(self.alive.astype(np.uint8))
+            self._filter_epoch = self._alive_epoch
+        return self._filter_dev
+
+    def filter_bitmap(self, mask: Optional[np.ndarray] = None,
+                      ids: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Standing serving filter (DESIGN.md §3.9): the alive bitmap —
+        which already carries every soft tombstone — AND'd with an optional
+        user subset given as a bitmap over point ids and/or an explicit id
+        allowlist. Returned as uint8 at the rerank CAPACITY width, so the
+        jit engines' per-window filter gather keeps a mutation-stable shape
+        (no recompiles as n_total drifts); capacity rows beyond n_total are
+        0 and unreachable anyway."""
+        out = self.alive.astype(np.uint8).copy()
+        if ids is not None:
+            sel = np.zeros_like(out)
+            ii = np.asarray(ids, np.int64).ravel()
+            ii = ii[(ii >= 0) & (ii < out.shape[0])]
+            sel[ii] = 1
+            out &= sel
+        if mask is not None:
+            m = np.zeros(out.shape[0], np.uint8)
+            mm = np.asarray(mask).astype(bool).ravel()[:out.shape[0]]
+            m[:mm.shape[0]] = mm
+            out &= m
+        return out
 
     # ------------------------------------------------------------ snapshots
     def _apply_pack_delta(self, p: PackedIVF) -> PackedIVF:

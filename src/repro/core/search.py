@@ -17,6 +17,13 @@ sublinear at serving time.
   elsewhere), sort-based dedup-by-max over the window, exact rerank.
   `search_jit_batched` streams large query batches through `bq`-sized tiles
   so live buffers stay bounded regardless of nq.
+
+Both engines serve **filtered / subset queries** (DESIGN.md §3.9): an
+index-side (n,) bitmap is gathered per candidate window — never expanded
+per query — so the candidate-local invariant survives filtering, and a
+selectivity-adaptive probe escalation (host-driven re-probe loop in the
+numpy engine, one fixed doubled-top_t second pass in the jit engine)
+rescues queries whose surviving window is thinner than the rerank budget.
 """
 from __future__ import annotations
 
@@ -64,14 +71,59 @@ def _group_ranks(group: np.ndarray, n_groups: int) -> np.ndarray:
 
 
 def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
-                 final_k: int = 10, rerank_budget: int = 0):
+                 final_k: int = 10, rerank_budget: int = 0,
+                 filter_mask: Optional[np.ndarray] = None,
+                 escalate: bool = True):
     """Returns (ids (nq, final_k), SearchStats). rerank_budget=0 → exact
     scoring of all candidates (no PQ stage).
 
     Fully vectorized over the batch: one ragged CSR gather, one LUT gather,
     and `np.lexsort`-based per-query segment dedup — no per-query Python loop.
+
+    filter_mask: optional (n_points,) bool/uint8 subset bitmap; candidates
+    with a 0 bit are dropped at the ragged-gather stage (Rii-style
+    candidate-side subset masking). Short masks zero-pad (ids beyond the
+    mask are excluded), matching MutableIVF.filter_bitmap. With `escalate`,
+    queries whose surviving unique-candidate set is thinner than the stage
+    budget (rerank_budget with a PQ stage, else final_k — the same signal
+    as the jit engine, additionally capped at the filter's population so a
+    subset smaller than the budget stops escalating once fully found)
+    re-probe with doubled top_t — host-driven, repeated until satisfied or
+    every partition is probed, so very selective filters degrade toward
+    filtered brute force instead of returning starved windows.
     """
     Q = np.asarray(Q, np.float32)
+    top_t = min(top_t, index.n_partitions)   # argpartition kth ∈ [0, c)
+    fm = None
+    if filter_mask is not None:
+        mm = np.asarray(filter_mask).astype(bool).ravel()[:index.n_points]
+        fm = np.zeros(index.n_points, bool)
+        fm[:mm.shape[0]] = mm
+    data = index.rerank_f32
+    if data is None:
+        from repro.quant.int8 import int8_dequantize
+        data = np.asarray(int8_dequantize(index.rerank_int8))
+    out, row_lens, uniq = _search_numpy_pass(index, Q, data, top_t, final_k,
+                                             rerank_budget, fm)
+    if fm is not None and escalate:
+        use_pq = index.codes is not None and rerank_budget > 0
+        thresh = min(rerank_budget if use_pq else final_k, int(fm.sum()))
+        t, c = top_t, index.n_partitions
+        thin = np.flatnonzero(uniq < thresh)
+        while thin.size and t < c:
+            t = min(2 * t, c)
+            o2, r2, u2 = _search_numpy_pass(index, Q[thin], data, t, final_k,
+                                            rerank_budget, fm)
+            out[thin], row_lens[thin], uniq[thin] = o2, r2, u2
+            thin = thin[u2 < thresh]
+    return out, SearchStats(row_lens, uniq)
+
+
+def _search_numpy_pass(index: IVFIndex, Q: np.ndarray, data: np.ndarray,
+                       top_t: int, final_k: int, rerank_budget: int,
+                       fm: Optional[np.ndarray]):
+    """One fixed-top_t pass of the host engine; returns (out, points_read,
+    unique_candidates) so the escalation driver can splice per-query rows."""
     nq = Q.shape[0]
     C = index.centroids
     scores_c = Q @ C.T                                   # (nq, c)
@@ -82,14 +134,16 @@ def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
     top_parts = top_parts[row, ordsel]
 
     use_pq = index.codes is not None and rerank_budget > 0
-    data = index.rerank_f32
-    if data is None:
-        from repro.quant.int8 import int8_dequantize
-        data = np.asarray(int8_dequantize(index.rerank_int8))
 
     cand_rows, qidx, seg_part, row_lens = _ragged_gather(index.starts,
                                                          top_parts)
     cand_ids = index.point_ids[cand_rows].astype(np.int64)
+    if fm is not None:
+        # subset masking at the gather stage: filtered candidates never
+        # reach scoring, dedup, or the rerank budget
+        keep = fm[cand_ids]
+        cand_rows, qidx = cand_rows[keep], qidx[keep]
+        seg_part, cand_ids = seg_part[keep], cand_ids[keep]
     # composite (query, id) key: one dedup pass for the whole batch
     key = qidx * np.int64(index.n_points) + cand_ids
 
@@ -122,7 +176,7 @@ def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
     top = rank < final_k
     out = np.full((nq, final_k), -1, np.int32)
     out[qs[top], rank[top]] = ids_sel[top]
-    return out, SearchStats(row_lens, uniq)
+    return out, row_lens, uniq
 
 
 # --------------------------------------------------------------------------
@@ -191,10 +245,18 @@ def pack_ivf(index: IVFIndex, pmax: Optional[int] = None,
         pair_codes = jax.default_backend() != "tpu"
     c = index.n_partitions
     sizes = index.partition_sizes()
-    pmax = int(pmax or sizes.max())
+    # honor an EXPLICIT pmax=0 (it is a cap, not "unset"); `pmax or max()`
+    # conflated the two and an empty/fully-tombstoned index then produced a
+    # zero-width pack whose downstream top_k crashed. Arrays are laid out at
+    # width >= 1 so a degenerate pack is all -1 sentinels and search returns
+    # all -1 ids through the _pad_topk contract.
+    if pmax is None:
+        pmax = int(sizes.max()) if sizes.size else 0
+    pmax = int(pmax)
+    width = max(pmax, 1)
     m = index.codes.shape[1] if index.codes is not None else 0
-    ids = np.full((c, pmax), -1, np.int32)
-    codes = np.zeros((c, pmax, m), np.uint8) if m else None
+    ids = np.full((c, width), -1, np.int32)
+    codes = np.zeros((c, width, m), np.uint8) if m else None
     # vectorized CSR → padded scatter (no per-partition Python loop)
     part = np.repeat(np.arange(c), sizes)                # (n_assign,)
     pos = np.arange(index.n_assignments) - np.repeat(index.starts[:-1], sizes)
@@ -282,12 +344,23 @@ def _pad_topk(ids, vals, k: int):
             jnp.pad(vals, pads, constant_values=-jnp.inf))
 
 
-def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
-                  rerank_budget: int, multiplicity: int = 2):
-    """Candidate-local search body shared by search_jit / search_jit_batched.
+def _search_pass(packed: PackedIVF, Q, top_t: int, final_k: int,
+                 rerank_budget: int, multiplicity: int = 2, filter=None):
+    """One fixed-top_t candidate-local pass.
 
     All per-query work is O(top_t·pmax): centroid scoring is one batched
     GEMM, candidate gather/scoring/dedup operate on the (nq, t·pmax) window.
+
+    `filter` is an index-side (n,) uint8 bitmap gathered PER WINDOW (the
+    (n,) array is an input, never a per-query intermediate — the §3.6
+    candidate-local invariant survives filtering, jaxpr-pinned in
+    tests/test_filtered_search.py). Filtered candidates are rewritten to
+    the -1 padding sentinel before dedup, so a spilled point that passes
+    still dedups to one slot and a starved window pads with -1 ids rather
+    than leaking filtered ids at -inf. Returns (ids, vals, n_surviving)
+    where n_surviving (None unfiltered) counts UNIQUE surviving candidates
+    capped at the stage budget — the escalation signal, matching the numpy
+    engine's unique-candidate count.
     """
     scores_c = Q @ packed.centroids.T                  # (nq, c) one GEMM
     psc, parts = jax.lax.top_k(scores_c, top_t)        # (nq, t)
@@ -295,6 +368,11 @@ def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
     nq, t, pmax = ids.shape
     ids = ids.reshape(nq, t * pmax)
     valid = ids >= 0
+    surviving = None
+    if filter is not None:
+        fbits = filter[jnp.maximum(ids, 0)]            # (nq, t·pmax) gather
+        valid = valid & (fbits > 0)
+        ids = jnp.where(valid, ids, -1)                # filter-aware dedup
     if packed.part_codes is None:
         # no PQ stage → exact-score the whole window (search_numpy's
         # rerank_budget=0 semantics); rerank_budget is ignored
@@ -302,7 +380,13 @@ def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
                            packed.rerank[jnp.maximum(ids, 0)], Q)
         exact = jnp.where(valid, exact, -jnp.inf)
         di, dv = dedup_topk_window(ids, exact, final_k, multiplicity)
-        return _pad_topk(di, dv, final_k)
+        di, dv = _pad_topk(di, dv, final_k)
+        if filter is not None:
+            # unique survivors, capped at final_k (finite ⟺ a real deduped
+            # candidate filled the slot) — matches the numpy engine's
+            # unique-count escalation signal
+            surviving = jnp.sum(jnp.isfinite(dv), axis=-1)
+        return di, dv, surviving
     luts = jax.vmap(lambda q: pq_lut(packed.pq, q))(Q)         # (nq, m, 16)
     if jax.default_backend() != "tpu" and packed.part_codes2 is not None:
         # CPU: pair-merged LUT gather (half the lookups of per-subspace)
@@ -316,38 +400,101 @@ def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
     approx = approx + jnp.repeat(psc, pmax, axis=-1)           # + <q, centroid>
     approx = jnp.where(valid, approx, -jnp.inf)
     bi, bv = dedup_topk_window(ids, approx, rerank_budget, multiplicity)
+    if filter is not None:
+        # unique survivors, capped at rerank_budget (a -inf slot means the
+        # deduped candidate set ran short of the budget) — slot-counting
+        # the raw window instead would over-count spilled duplicates and
+        # skip escalation the numpy engine's unique count would take
+        surviving = jnp.sum(jnp.isfinite(bv), axis=-1)
     exact = jnp.einsum("qbd,qd->qb", packed.rerank[jnp.maximum(bi, 0)], Q)
     exact = jnp.where(jnp.isfinite(bv), exact, -jnp.inf)
     fv, fpos = jax.lax.top_k(exact, min(final_k, exact.shape[-1]))
-    return _pad_topk(jnp.take_along_axis(bi, fpos, axis=-1), fv, final_k)
+    fi, fv = _pad_topk(jnp.take_along_axis(bi, fpos, axis=-1), fv, final_k)
+    return fi, fv, surviving
+
+
+def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
+                  rerank_budget: int, multiplicity: int = 2, filter=None,
+                  escalate: bool = False):
+    """Search body shared by search_jit / search_jit_batched: one
+    `_search_pass`, plus — on the filtered path only — a SECOND fixed pass
+    at doubled top_t whose rows are selected per-query where the first
+    pass's surviving window was thinner than the rerank budget (the jit
+    engine's shape-static analogue of the numpy engine's host-driven
+    escalation loop). Unfiltered traces are byte-for-byte the single pass.
+    """
+    c = packed.centroids.shape[0]
+    top_t = min(top_t, c)                  # lax.top_k width ∈ [0, c]
+    ids1, vals1, surv1 = _search_pass(packed, Q, top_t, final_k,
+                                      rerank_budget, multiplicity, filter)
+    if filter is None or not escalate or top_t >= c:
+        return ids1, vals1
+    thresh = rerank_budget if packed.part_codes is not None else final_k
+    ids2, vals2, _ = _search_pass(packed, Q, min(2 * top_t, c), final_k,
+                                  rerank_budget, multiplicity, filter)
+    # the doubled probe set is a superset (top-2t ⊇ top-t of the same
+    # centroid scores), so taking pass-2 rows never loses candidates
+    need = (surv1 < thresh)[:, None]
+    return jnp.where(need, ids2, ids1), jnp.where(need, vals2, vals1)
 
 
 @functools.partial(jax.jit, static_argnames=("top_t", "final_k",
-                                              "rerank_budget", "multiplicity"))
+                                              "rerank_budget", "multiplicity",
+                                              "escalate"))
 def search_jit(packed: PackedIVF, Q, top_t: int, final_k: int,
-               rerank_budget: int = 256, multiplicity: int = 2):
+               rerank_budget: int = 256, multiplicity: int = 2,
+               filter=None, escalate: bool = True):
     """Fully-jit batched search. Returns (ids, scores) of shape (nq, final_k).
 
     Pipeline: batched centroid MIPS top-t → gather per-query candidate
     windows → PQ LUT scoring (+ centroid offset; Pallas one-hot MXU kernel
     on TPU) → sort-based dedup-by-max over the window → top rerank_budget →
     exact rerank → top final_k. No intermediate scales with n.
+
+    filter: optional (n,) uint8 device bitmap over point ids (0 = drop);
+    gathered per candidate window, never expanded per query. With
+    `escalate` a second fixed doubled-top_t pass backstops thin surviving
+    windows (selectivity escalation, DESIGN.md §3.9). Passing filter=None
+    traces exactly the unfiltered PR 4 pipeline.
     """
     return _search_block(packed, Q, top_t, final_k, rerank_budget,
-                         multiplicity)
+                         multiplicity, filter, escalate)
+
+
+def bq_bucket(nq: int, bq: int) -> int:
+    """Power-of-two query-count bucket (≥ 8), capped at the serving tile
+    size. Serving callers pad their batch to a bucket multiple BEFORE the
+    jit boundary and slice the result — the traced Q shape (not just the
+    static bq) keys the compile cache, so per-distinct-nq executables were
+    a recompile storm for small online batches."""
+    return min(bq, max(8, 1 << (max(nq, 1) - 1).bit_length()))
+
+
+def pad_queries(Q: np.ndarray, bq_cap: int):
+    """Host-side bucket padding for serving entry points: (nq, d) float32
+    → (padded Q, nq, bucket). Callers pass `bq=bucket` to
+    search_jit_batched and slice results back to [:nq]."""
+    Q = np.atleast_2d(np.asarray(Q, np.float32))
+    nq = Q.shape[0]
+    bq = bq_bucket(nq, bq_cap)
+    pad = (-nq) % bq
+    Qp = np.pad(Q, ((0, pad), (0, 0))) if pad else Q
+    return Qp, nq, bq
 
 
 @functools.partial(jax.jit,
                    static_argnames=("top_t", "final_k", "rerank_budget", "bq",
-                                    "multiplicity"))
+                                    "multiplicity", "escalate"))
 def search_jit_batched(packed: PackedIVF, Q, top_t: int, final_k: int,
                        rerank_budget: int = 256, bq: int = 128,
-                       multiplicity: int = 2):
+                       multiplicity: int = 2, filter=None,
+                       escalate: bool = True):
     """`search_jit` streamed over bq-query tiles via lax.map.
 
     Live buffers are O(bq·top_t·pmax) regardless of nq — the driver for
     large offline batches and the serving engine's bulk path, where a flat
-    vmap over nq would blow VMEM/HBM.
+    vmap over nq would blow VMEM/HBM. `filter`/`escalate` as in search_jit
+    (the bitmap is closed over, shared across tiles).
     """
     nq, d = Q.shape
     pad = (-nq) % bq
@@ -355,6 +502,6 @@ def search_jit_batched(packed: PackedIVF, Q, top_t: int, final_k: int,
     tiles = Qp.reshape(-1, bq, d)
     ids, vals = jax.lax.map(
         lambda qb: _search_block(packed, qb, top_t, final_k, rerank_budget,
-                                 multiplicity), tiles)
+                                 multiplicity, filter, escalate), tiles)
     k = ids.shape[-1]
     return ids.reshape(-1, k)[:nq], vals.reshape(-1, k)[:nq]

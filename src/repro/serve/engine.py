@@ -96,16 +96,33 @@ class AnnEngine:
     def add(self, X) -> np.ndarray:
         return self.index.add(X)
 
-    def remove(self, ids) -> int:
-        return self.index.remove(ids)
+    def remove(self, ids, hard: bool = True) -> int:
+        """Delete points. hard=False leaves slots in place and serves the
+        tombstones through the standing filter bitmap (zero data movement,
+        no snapshot invalidation) — see MutableIVF.remove."""
+        return self.index.remove(ids, hard=hard)
 
-    def search(self, Q, k: int = 10, top_t: Optional[int] = None):
-        """(nq, d) queries → (ids (nq, k) int32, scores (nq, k))."""
-        from repro.core.search import search_jit_batched
+    def search(self, Q, k: int = 10, top_t: Optional[int] = None,
+               filter_ids=None, filter_mask=None, escalate: bool = True):
+        """(nq, d) queries → (ids (nq, k) int32, scores (nq, k)).
+
+        filter_ids / filter_mask restrict the search to a subset of live
+        points (an explicit id allowlist and/or a bitmap over point ids);
+        both compose with the index's standing soft-tombstone filter. The
+        filtered path runs the selectivity-escalating jit pipeline
+        (DESIGN.md §3.9) — pass escalate=False when the filter is known to
+        be fat (e.g. a handful of soft tombstones) to skip the fixed
+        second probe pass. Unfiltered serving with no soft tombstones
+        stays on the exact PR 4 trace.
+        """
+        from repro.core.search import pad_queries, search_jit_batched
+        filt, escalate = self.index.serving_filter(
+            mask=filter_mask, ids=filter_ids, escalate=escalate)
+        Qp, nq, bq = pad_queries(Q, self.bq)
         ids, vals = search_jit_batched(
-            self.index.pack(), jnp.asarray(Q, jnp.float32),
-            top_t=top_t or self.top_t, final_k=k,
-            rerank_budget=max(self.rerank_budget, k),
-            bq=min(self.bq, max(1, np.asarray(Q).shape[0])),
-            multiplicity=1 + max(self.index.n_spills, 1))
-        return np.asarray(ids), np.asarray(vals)
+            self.index.pack(), jnp.asarray(Qp),
+            top_t=min(top_t or self.top_t, self.index.centroids.shape[0]),
+            final_k=k, rerank_budget=max(self.rerank_budget, k),
+            bq=bq, multiplicity=1 + max(self.index.n_spills, 1),
+            filter=filt, escalate=escalate)
+        return np.asarray(ids)[:nq], np.asarray(vals)[:nq]

@@ -50,66 +50,134 @@ class KNNMemory:
     index's id space (decode appends one position per step — appends must
     be amortized O(batch), not O(n_total)); rows at or beyond
     `index.n_total` are unused capacity.
+
+    Retrieval takes kNN-attention-shaped subset filters (DESIGN.md §3.9):
+    a `recency` window (ids are append-ordered, so the last W positions are
+    exactly the id range [n_total - W, n_total)), a per-sequence `segment`
+    label recorded at `add` time (multi-sequence batches sharing one
+    memory must not attend across sequences), and a raw `filter_mask`.
+    All compose with each other and with the index's standing tombstone
+    filter, on both engines.
     """
     index: MutableIVF
     values: np.ndarray    # (>= n_total, hd) capacity buffer, see above
     engine: str = "numpy"
+    segments: Optional[np.ndarray] = None   # (>= n_total,) i32 label per id
 
     @classmethod
     def build(cls, keys: np.ndarray, values: np.ndarray,
               n_partitions: Optional[int] = None, lam: float = 1.0,
               spill_mode: str = "soar", seed: int = 0,
-              engine: str = "numpy"):
+              engine: str = "numpy", segment: int = 0):
         n = keys.shape[0]
         c = n_partitions or max(4, n // 256)
         idx = build_ivf(jax.random.PRNGKey(seed), keys, c,
                         spill_mode=spill_mode, lam=lam, train_iters=6)
         return cls(MutableIVF.from_index(idx),
-                   np.array(values, np.float32), engine=engine)
+                   np.array(values, np.float32), engine=engine,
+                   segments=np.full(n, segment, np.int32))
 
     @property
     def keys(self) -> np.ndarray:
         """Cached keys by id — the index's rerank array IS the key store."""
         return self.index.rerank[:self.index.n_total]
 
-    def add(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+    def add(self, keys: np.ndarray, values: np.ndarray,
+            segment: int = 0) -> np.ndarray:
         """Append fresh KV pairs (e.g. newly decoded positions); returns
         their stable ids. Assignment is incremental — the codebook trained
-        at build time stays frozen (DESIGN.md §3.7)."""
+        at build time stays frozen (DESIGN.md §3.7). `segment` labels the
+        batch for per-sequence retrieval filtering."""
         keys = np.atleast_2d(np.asarray(keys, np.float32))
         values = np.atleast_2d(np.asarray(values, np.float32))
         assert keys.shape[0] == values.shape[0]
         ids = self.index.add(keys)
         self.values = _grow_rows(self.values, self.index.n_total, 0.0)
         self.values[ids] = values
+        if self.segments is None:
+            self.segments = np.zeros(self.index.n_total, np.int32)
+        self.segments = _grow_rows(self.segments, self.index.n_total, -1)
+        self.segments[ids] = segment
         return ids
 
-    def remove(self, ids) -> int:
-        """Evict cached positions (tombstone; ids stay stable)."""
-        return self.index.remove(ids)
+    def remove(self, ids, hard: bool = True) -> int:
+        """Evict cached positions (tombstone; ids stay stable). hard=False
+        defers slot reclamation to the standing filter bitmap — the cheap
+        choice for per-step eviction inside a decode loop."""
+        return self.index.remove(ids, hard=hard)
 
-    def retrieve(self, q: np.ndarray, k: int = 32, top_t: int = 4):
-        """q: (nq, hd) queries → (ids (nq,k), keys, values)."""
+    def _serving_filter(self, recency, segment, filter_mask):
+        """Compose recency window / segment label / user bitmap with the
+        index's standing tombstone filter; None when retrieval can stay on
+        the unfiltered fast path."""
+        if (recency is None and segment is None and filter_mask is None
+                and not self.index.n_soft_deleted):
+            return None
+        out = self.index.filter_bitmap(mask=filter_mask)
+        nt = self.index.n_total
+        if recency is not None:
+            out[:max(0, nt - int(recency))] = 0
+        if segment is not None:
+            seg = np.full(out.shape[0], -1, np.int32)
+            if self.segments is not None:
+                w = min(self.segments.shape[0], out.shape[0])
+                seg[:w] = self.segments[:w]
+            out &= (seg == segment)
+        return out
+
+    def retrieve(self, q: np.ndarray, k: int = 32, top_t: int = 4,
+                 recency: Optional[int] = None,
+                 segment: Optional[int] = None,
+                 filter_mask: Optional[np.ndarray] = None,
+                 escalate: bool = True):
+        """q: (nq, hd) queries → (ids (nq,k), keys, values).
+
+        recency: only attend over the last `recency` cached positions;
+        segment: only over positions added with that segment label;
+        filter_mask: arbitrary (n_total,)-prefix bitmap. Any combination;
+        escalate=False skips the thin-window re-probe (search.py §3.9).
+        """
         if self.engine == "jit":
+            from repro.core.search import pad_queries
+            if (recency is None and segment is None and filter_mask is None):
+                # standing soft-tombstone filter only: cached device
+                # bitmap, and no escalation pass unless it is actually thin
+                f, escalate = self.index.serving_filter(escalate=escalate)
+            else:
+                f = jnp.asarray(self._serving_filter(recency, segment,
+                                                     filter_mask))
+            # pad to the bucket before the jit boundary (a per-decode-step
+            # ragged nq must not compile one executable per batch size)
+            qp, nq, bq = pad_queries(q, 128)
             jids, _ = search_jit_batched(
-                self.index.pack(), jnp.asarray(q, jnp.float32), top_t=top_t,
-                final_k=k, rerank_budget=max(4 * k, 64),
-                bq=min(128, max(1, q.shape[0])),
-                multiplicity=1 + max(self.index.n_spills, 1))
-            ids = np.asarray(jids)
+                self.index.pack(), jnp.asarray(qp), top_t=top_t,
+                final_k=k, rerank_budget=max(4 * k, 64), bq=bq,
+                multiplicity=1 + max(self.index.n_spills, 1),
+                filter=f, escalate=escalate)
+            ids = np.asarray(jids)[:nq]
         else:
-            ids, _ = search_numpy(self.index.to_ivf_index(), q, top_t=top_t,
-                                  final_k=k)
+            filt = self._serving_filter(recency, segment, filter_mask)
+            ids, _ = search_numpy(
+                self.index.to_ivf_index(), q, top_t=top_t, final_k=k,
+                filter_mask=(filt[:self.index.n_total]
+                             if filt is not None else None),
+                escalate=escalate)
         safe = np.maximum(ids, 0)
         return ids, self.keys[safe], self.values[safe]
 
-    def attend(self, q: np.ndarray, k: int = 32, top_t: int = 4):
+    def attend(self, q: np.ndarray, k: int = 32, top_t: int = 4,
+               recency: Optional[int] = None, segment: Optional[int] = None,
+               filter_mask: Optional[np.ndarray] = None,
+               escalate: bool = True):
         """Approximate attention output for each query over retrieved keys.
 
         Returns (out (nq, hd), ids). Softmax over the retrieved set only —
-        the memorizing-transformer approximation.
+        the memorizing-transformer approximation. Filter kwargs as in
+        `retrieve` (e.g. recency-window kNN attention).
         """
-        ids, K, V = self.retrieve(q, k=k, top_t=top_t)
+        ids, K, V = self.retrieve(q, k=k, top_t=top_t, recency=recency,
+                                  segment=segment, filter_mask=filter_mask,
+                                  escalate=escalate)
         logits = np.einsum("qd,qkd->qk", q, K) / np.sqrt(q.shape[-1])
         logits[ids < 0] = -1e30
         w = np.exp(logits - logits.max(axis=1, keepdims=True))

@@ -132,12 +132,59 @@ print("OK recall", rec)
 """
 
 
+SCRIPT_ANN_FILTERED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import (build_sharded_ivf, build_sharded_ivf_pq,
+                                    make_distributed_search,
+                                    make_distributed_search_pq, shard_filters)
+from repro.launch.mesh import set_mesh
+from repro.data.vectors import make_manifold
+
+ds = make_manifold(jax.random.PRNGKey(0), n=8_000, d=32, nq=32, intrinsic_dim=8)
+mask = np.random.default_rng(0).random(8_000) < 0.2
+alive = np.flatnonzero(mask)
+sc = ds.Q.astype(np.float32) @ ds.X[alive].T
+tn = alive[np.argsort(-sc, axis=1)[:, :10]]        # FILTERED exact top-10
+mesh = jax.make_mesh((8,), ("data",))
+filt = shard_filters(mask, [1000] * 8)
+sharded = build_sharded_ivf(jax.random.PRNGKey(1), ds.X, n_shards=8,
+                            n_partitions=16, spill_mode="soar", train_iters=4)
+search = make_distributed_search(mesh, ("data",), top_t=10, final_k=10,
+                                 with_filter=True)
+with set_mesh(mesh):
+    ids, _ = jax.jit(search)(sharded, jnp.asarray(ds.Q), filt)
+ids = np.asarray(ids)
+rec = (ids[:, :, None] == tn[:, None, :]).any(-1).mean()
+assert rec > 0.9, f"filtered distributed recall {rec}"
+assert mask[ids[ids >= 0]].all(), "result violated the subset filter"
+shardedpq = build_sharded_ivf_pq(jax.random.PRNGKey(1), ds.X, n_shards=8,
+                                 n_partitions=16, pq_subspaces=8,
+                                 spill_mode="soar", train_iters=4)
+searchpq = make_distributed_search_pq(mesh, ("data",), top_t=10, final_k=10,
+                                      rerank_k=128, q_chunk=32,
+                                      with_filter=True)
+with set_mesh(mesh):
+    idsp, _ = jax.jit(searchpq)(shardedpq, jnp.asarray(ds.Q), filt)
+idsp = np.asarray(idsp)
+recp = (idsp[:, :, None] == tn[:, None, :]).any(-1).mean()
+assert recp > 0.85, f"filtered distributed PQ recall {recp}"
+assert mask[idsp[idsp >= 0]].all()
+print("OK recall", rec, recp)
+"""
+
+
 def test_distributed_ann_search():
     _run(SCRIPT_ANN)
 
 
 def test_distributed_ann_search_pq():
     _run(SCRIPT_ANN_PQ)
+
+
+def test_distributed_ann_search_filtered():
+    _run(SCRIPT_ANN_FILTERED)
 
 
 def test_elastic_checkpoint_remesh():

@@ -1,0 +1,388 @@
+"""Filtered / subset search subsystem (ISSUE 5 tentpole) + the three
+satellite crash/recompile regressions.
+
+Pins, per the acceptance criteria:
+
+1. Parity: with full probes / full budgets, filtered search on BOTH engines
+   equals filtered brute force; at default budgets and selectivity 0.1 the
+   recall gap to filtered exact is < 0.01.
+2. Degenerates: all-zero filters return all -1; an all-ones filter is
+   bitwise-identical to unfiltered search; empty / fully-tombstoned /
+   explicit-pmax=0 packs search cleanly (all -1 via the _pad_topk contract)
+   instead of crashing.
+3. Filter+spill dedup: a spilled point that passes the filter still dedups
+   to one result slot.
+4. Candidate-locality survives filtering: the filtered+escalating jit trace
+   has no (n,)- or (*, n)-shaped equation output (§3.6 invariant, extended
+   to §3.9).
+5. Crash/recompile satellites: top_t > n_partitions is clamped on every
+   path (was an argpartition/top_k crash), and AnnEngine's small-batch
+   serving no longer compiles one executable per distinct nq.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MutableIVF, build_ivf, pack_ivf, search_jit, search_numpy
+from repro.core.search import search_jit_batched
+from repro.data.vectors import make_manifold
+from repro.serve.engine import AnnEngine
+from repro.serve.knn_memory import KNNMemory
+
+N, D, NQ = 8_000, 32, 37
+C_PARTS = 32
+TOP_T, FINAL_K = 12, 10
+
+
+@pytest.fixture(scope="module")
+def spilled():
+    ds = make_manifold(jax.random.PRNGKey(0), n=N, d=D, nq=NQ,
+                       intrinsic_dim=8)
+    idx = build_ivf(jax.random.PRNGKey(1), ds.X, C_PARTS, spill_mode="soar",
+                    pq_subspaces=8, train_iters=5)
+    return ds, idx, pack_ivf(idx)
+
+
+def _mask(sel: float, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).random(N) < sel
+
+
+def _filtered_exact(X, Q, mask, k: int = FINAL_K) -> np.ndarray:
+    alive = np.flatnonzero(mask)
+    sc = Q.astype(np.float32) @ X[alive].T
+    return alive[np.argsort(-sc, axis=1)[:, :k]]
+
+
+def _recall(ids, tn) -> float:
+    return float((ids[:, :, None] == tn[:, None, :]).any(-1).mean())
+
+
+# ------------------------------------------------------------------ parity
+
+def test_numpy_full_probe_filtered_is_exact(spilled):
+    """Full probe + exact scoring under a filter ≡ filtered brute force."""
+    ds, idx, _ = spilled
+    mask = _mask(0.3)
+    tn = _filtered_exact(ds.X, ds.Q, mask)
+    ids, _ = search_numpy(idx, ds.Q, top_t=C_PARTS, final_k=FINAL_K,
+                          rerank_budget=0, filter_mask=mask)
+    assert _recall(ids, tn) == 1.0
+
+
+def test_jit_full_window_filtered_is_exact(spilled):
+    ds, idx, packed = spilled
+    mask = _mask(0.3)
+    tn = _filtered_exact(ds.X, ds.Q, mask)
+    window = C_PARTS * packed.part_ids.shape[1]
+    ids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=C_PARTS,
+                        final_k=FINAL_K, rerank_budget=window,
+                        filter=jnp.asarray(mask.astype(np.uint8)))
+    assert _recall(np.asarray(ids), tn) == 1.0
+
+
+def test_engines_identical_filtered(spilled):
+    """Window-covering budget → both engines reduce to exact rerank of the
+    same filtered deduped candidate set → identical ids."""
+    ds, idx, packed = spilled
+    mask = _mask(0.4)
+    window = TOP_T * packed.part_ids.shape[1]
+    jids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K, rerank_budget=window,
+                         filter=jnp.asarray(mask.astype(np.uint8)),
+                         escalate=False)
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=window, filter_mask=mask,
+                           escalate=False)
+    assert np.array_equal(np.asarray(jids), nids)
+
+
+def test_filtered_recall_acceptance_sel_0p1(spilled):
+    """ISSUE 5 acceptance: selectivity 0.1, default budgets, both engines
+    within 0.01 of filtered exact search."""
+    ds, idx, packed = spilled
+    mask = _mask(0.1)
+    tn = _filtered_exact(ds.X, ds.Q, mask)
+    jids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K,
+                         filter=jnp.asarray(mask.astype(np.uint8)))
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=256, filter_mask=mask)
+    assert _recall(np.asarray(jids), tn) >= 0.99
+    assert _recall(nids, tn) >= 0.99
+
+
+def test_results_respect_filter(spilled):
+    ds, idx, packed = spilled
+    mask = _mask(0.2, seed=3)
+    jids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K,
+                         filter=jnp.asarray(mask.astype(np.uint8)))
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=256, filter_mask=mask)
+    jids = np.asarray(jids)
+    assert mask[jids[jids >= 0]].all()
+    assert mask[nids[nids >= 0]].all()
+
+
+def test_escalation_rescues_thin_filters(spilled):
+    """At selectivity 0.01 the surviving window is thinner than the rerank
+    budget → the second (jit) / looped (numpy) escalation pass must recover
+    recall lost to the starved first probe."""
+    ds, idx, packed = spilled
+    mask = _mask(0.01, seed=7)
+    tn = _filtered_exact(ds.X, ds.Q, mask)
+    f = jnp.asarray(mask.astype(np.uint8))
+    base, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K, filter=f, escalate=False)
+    esc, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                        final_k=FINAL_K, filter=f, escalate=True)
+    r_base, r_esc = _recall(np.asarray(base), tn), _recall(np.asarray(esc), tn)
+    assert r_esc >= r_base
+    assert r_esc >= 0.99
+    nesc, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=256, filter_mask=mask)
+    assert _recall(nesc, tn) >= 0.99
+
+
+def test_short_filter_mask_zero_pads(spilled):
+    """A mask shorter than n_points must exclude the uncovered ids (like
+    MutableIVF.filter_bitmap), not crash the candidate gather."""
+    ds, idx, _ = spilled
+    short = np.ones(N // 2, bool)
+    ids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                          rerank_budget=256, filter_mask=short)
+    assert (ids >= 0).any()
+    assert (ids[ids >= 0] < N // 2).all()
+
+
+def test_nopq_escalation_threshold_is_final_k():
+    """Regression: on a no-PQ index the numpy engine compared the unique-
+    survivor count against rerank_budget — which the no-PQ scoring path
+    ignores — so any subset smaller than the budget walked every query to
+    a full filtered brute-force scan on every call."""
+    ds = make_manifold(jax.random.PRNGKey(2), n=4000, d=16, nq=8,
+                       intrinsic_dim=6)
+    idx = build_ivf(jax.random.PRNGKey(3), ds.X, 16, spill_mode="soar",
+                    train_iters=3)                       # no PQ stage
+    mask = np.zeros(4000, bool)
+    mask[np.random.default_rng(0).choice(4000, 200, replace=False)] = True
+    _, stats = search_numpy(idx, ds.Q, top_t=4, final_k=10,
+                            rerank_budget=256, filter_mask=mask)
+    # plenty of unique survivors ≥ final_k at the first probe → the
+    # escalation loop must NOT walk to a full scan of the index
+    assert stats.points_read.max() < idx.n_assignments
+
+
+# -------------------------------------------------------------- degenerates
+
+def test_all_filtered_returns_minus_one(spilled):
+    ds, idx, packed = spilled
+    zeros = np.zeros(N, bool)
+    jids, jvals = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                             final_k=FINAL_K,
+                             filter=jnp.zeros(N, jnp.uint8))
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=256, filter_mask=zeros)
+    assert (np.asarray(jids) == -1).all()
+    assert np.isneginf(np.asarray(jvals)).all()
+    assert (nids == -1).all()
+
+
+def test_full_mask_is_bitwise_unfiltered(spilled):
+    """An all-ones filter changes nothing: same ids AND same scores as the
+    unfiltered pipeline (whose trace itself is the PR 4 one)."""
+    ds, idx, packed = spilled
+    Q = jnp.asarray(ds.Q)
+    kw = dict(top_t=TOP_T, final_k=FINAL_K, rerank_budget=256)
+    uids, uvals = search_jit(packed, Q, **kw)
+    fids, fvals = search_jit(packed, Q, filter=jnp.ones(N, jnp.uint8), **kw)
+    assert np.array_equal(np.asarray(uids), np.asarray(fids))
+    assert np.array_equal(np.asarray(uvals), np.asarray(fvals))
+    unp, _ = search_numpy(idx, ds.Q, filter_mask=np.ones(N, bool), **kw)
+    ref, _ = search_numpy(idx, ds.Q, **kw)
+    assert np.array_equal(unp, ref)
+
+
+# ----------------------------------------------------- filter + spill dedup
+
+def test_filtered_spill_still_dedups(spilled):
+    """Every point sits in two partitions (SOAR spill); one passing the
+    filter must still occupy exactly one result slot."""
+    ds, idx, packed = spilled
+    counts = np.bincount(idx.point_ids, minlength=idx.n_points)
+    assert np.all(counts == 2)            # precondition: duplicates exist
+    mask = _mask(0.5, seed=11)
+    jids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K,
+                         filter=jnp.asarray(mask.astype(np.uint8)))
+    nids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=256, filter_mask=mask)
+    for row in np.asarray(jids):
+        live = row[row >= 0]
+        assert len(set(live.tolist())) == len(live)
+    for row in nids:
+        live = row[row >= 0]
+        assert len(set(live.tolist())) == len(live)
+
+
+# ------------------------------------------------ candidate-locality (§3.9)
+
+def _jaxpr_shapes(jaxpr):
+    out = []
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v.aval, "shape"):
+                out.append(tuple(v.aval.shape))
+        for p in eqn.params.values():
+            inner = getattr(p, "jaxpr", None)
+            if inner is not None:
+                out.extend(_jaxpr_shapes(inner))
+    return out
+
+
+def test_no_database_sized_intermediates_filtered(spilled):
+    """§3.6's jaxpr pin extended to the filtered+escalating path: the (n,)
+    filter bitmap is an INPUT, gathered per window — no equation may emit
+    an (n,)- or (*, n)-shaped buffer."""
+    ds, idx, packed = spilled
+    n = idx.n_points
+    f = jnp.asarray(_mask(0.1).astype(np.uint8))
+    closed = jax.make_jaxpr(
+        lambda p, q, fb: search_jit(p, q, top_t=TOP_T, final_k=FINAL_K,
+                                    rerank_budget=256, filter=fb,
+                                    escalate=True))(packed,
+                                                    jnp.asarray(ds.Q), f)
+    bad = [s for s in _jaxpr_shapes(closed.jaxpr)
+           if s == (n,) or (len(s) == 2 and s[1] == n)]
+    assert not bad, f"database-sized intermediates in filtered path: {bad}"
+
+
+# ------------------------------------------- satellite: top_t > n_partitions
+
+def test_topt_overflow_clamped_numpy(spilled):
+    """Regression: np.argpartition kth out-of-bounds when top_t > c."""
+    ds, idx, _ = spilled
+    big, _ = search_numpy(idx, ds.Q, top_t=10 * C_PARTS, final_k=FINAL_K,
+                          rerank_budget=256)
+    ref, _ = search_numpy(idx, ds.Q, top_t=C_PARTS, final_k=FINAL_K,
+                          rerank_budget=256)
+    assert np.array_equal(big, ref)
+
+
+def test_topt_overflow_clamped_jit(spilled):
+    """Regression: lax.top_k width overflow when top_t > c."""
+    ds, idx, packed = spilled
+    big, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=10 * C_PARTS,
+                        final_k=FINAL_K, rerank_budget=256)
+    ref, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=C_PARTS,
+                        final_k=FINAL_K, rerank_budget=256)
+    assert np.array_equal(np.asarray(big), np.asarray(ref))
+
+
+def test_topt_overflow_clamped_engine(spilled):
+    ds, idx, _ = spilled
+    eng = AnnEngine(MutableIVF.from_index(idx))
+    ids, _ = eng.search(ds.Q, k=5, top_t=10 * C_PARTS)
+    assert ids.shape == (NQ, 5) and (ids >= 0).all()
+
+
+# --------------------------------------- satellite: degenerate / empty packs
+
+def test_pack_ivf_explicit_pmax_zero(spilled):
+    """Regression: `pmax or sizes.max()` treated an explicit 0 as unset;
+    now it is honored as a cap → an all-sentinel width-1 pack that searches
+    to all -1 instead of crashing top_k on a zero-width window."""
+    ds, idx, _ = spilled
+    packed = pack_ivf(idx, pmax=0)
+    assert packed.part_ids.shape[1] == 1
+    assert (np.asarray(packed.part_ids) == -1).all()
+    assert (np.asarray(packed.sizes) == 0).all()
+    ids, vals = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                           final_k=FINAL_K, rerank_budget=256)
+    assert (np.asarray(ids) == -1).all()
+    assert np.isneginf(np.asarray(vals)).all()
+
+
+def test_fully_tombstoned_index_searches_clean(spilled):
+    """Regression: a fully-removed (hence fully-compacted) index produced a
+    zero-width pack whose downstream top_k crashed."""
+    ds, idx, _ = spilled
+    mut = MutableIVF.from_index(idx)
+    assert mut.remove(np.arange(idx.n_points)) == idx.n_points
+    csr = mut.to_ivf_index()
+    assert csr.point_ids.size == 0
+    packed = pack_ivf(csr)                # sizes all zero → width-1 sentinel
+    ids, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                        final_k=FINAL_K, rerank_budget=256)
+    assert (np.asarray(ids) == -1).all()
+    nids, _ = search_numpy(csr, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                           rerank_budget=256)
+    assert (nids == -1).all()
+    mids, _ = search_jit(mut.pack(), jnp.asarray(ds.Q), top_t=TOP_T,
+                         final_k=FINAL_K, rerank_budget=256)
+    assert (np.asarray(mids) == -1).all()
+
+
+# ------------------------------------ satellite: per-nq recompile in serving
+
+def test_engine_small_batches_share_one_compile(spilled):
+    """Regression: `bq=min(self.bq, nq)` keyed a fresh jit executable on
+    every distinct small query-batch size; bucketed padding must serve all
+    of nq ∈ [1, 8] from one executable."""
+    ds, idx, _ = spilled
+    eng = AnnEngine(MutableIVF.from_index(idx))
+    eng.search(ds.Q[:3], k=5)                    # warm the bucket
+    before = search_jit_batched._cache_size()
+    outs = {nq: eng.search(ds.Q[:nq], k=5)[0] for nq in range(1, 9)}
+    assert search_jit_batched._cache_size() == before
+    full, _ = eng.search(ds.Q, k=5)
+    for nq, ids in outs.items():
+        assert ids.shape == (nq, 5)
+        assert np.array_equal(ids, full[:nq])    # padding never leaks
+
+
+# --------------------------------------------- serving-stack filter plumbing
+
+def test_engine_filter_ids_and_soft_remove(spilled):
+    ds, idx, _ = spilled
+    eng = AnnEngine(MutableIVF.from_index(idx), top_t=TOP_T)
+    allow = np.flatnonzero(_mask(0.2, seed=5))
+    ids, _ = eng.search(ds.Q, k=FINAL_K, filter_ids=allow)
+    assert np.isin(ids[ids >= 0], allow).all()
+    # soft remove: zero data movement (slots intact), served via the filter
+    victims = allow[:200]
+    slots_before = int((eng.index.part_ids >= 0).sum())
+    assert eng.remove(victims, hard=False) == 200
+    assert int((eng.index.part_ids >= 0).sum()) == slots_before
+    ids2, _ = eng.search(ds.Q, k=FINAL_K)
+    assert not np.isin(ids2, victims).any()
+    # user filter composes with the standing tombstone filter
+    ids3, _ = eng.search(ds.Q, k=FINAL_K, filter_ids=allow)
+    assert not np.isin(ids3, victims).any()
+    assert np.isin(ids3[ids3 >= 0], allow).all()
+    # hardening reclaims the slots and preserves exclusion
+    assert eng.index.harden_soft_deletes() == 200
+    ids4, _ = eng.search(ds.Q, k=FINAL_K)
+    assert not np.isin(ids4, victims).any()
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jit"])
+def test_knn_memory_recency_and_segment_filters(engine):
+    rng = np.random.default_rng(0)
+    K = rng.standard_normal((1500, 16)).astype(np.float32)
+    V = rng.standard_normal((1500, 16)).astype(np.float32)
+    mem = KNNMemory.build(K, V, n_partitions=16, engine=engine, segment=0)
+    k1 = rng.standard_normal((120, 16)).astype(np.float32)
+    ids1 = mem.add(k1, rng.standard_normal((120, 16)).astype(np.float32),
+                   segment=1)
+    q = np.concatenate([K[:5], k1[:5]]).astype(np.float32)
+    seg_ids, _, _ = mem.retrieve(q, k=8, top_t=8, segment=1)
+    assert np.isin(seg_ids[seg_ids >= 0], ids1).all()
+    rec_ids, _, _ = mem.retrieve(q, k=8, top_t=8, recency=120)
+    assert (rec_ids[rec_ids >= 0] >= 1500).all()
+    # recency ∩ segment 0 = empty → all padding, and attend returns zeros
+    both, _, _ = mem.retrieve(q, k=8, top_t=8, recency=120, segment=0)
+    assert (both == -1).all()
+    out, aids = mem.attend(q, k=8, top_t=8, recency=120, segment=0)
+    assert (aids == -1).all() and (out == 0).all()
