@@ -1,41 +1,91 @@
-"""Paper Figures 11/12: recall–throughput tradeoff (CPU proxy).
+"""Closed-loop serving QPS + latency percentiles through AnnEngine.
 
-Hardware caveat (DESIGN.md §3): the paper's QPS numbers come from AVX2 LUT16
-kernels on Xeon; this container measures the host-orchestrated numpy engine
-on 1 core, so ABSOLUTE throughput is not comparable — the figures here
-establish (a) the recall/points-read tradeoff shape and (b) SOAR vs
-no-spill at matched recall, which are hardware-independent. The TPU-target
-kernels are exercised via tests (interpret mode) and the dry-run.
+Rewritten for the current serving surface (the seed-era version called
+search_numpy on a bare IVFIndex; serving has since become
+serve/engine.AnnEngine over a MutableIVF with the jit batched pipeline,
+bucket-padded queries, and a pluggable probe router — DESIGN.md §3.7/§3.10).
+
+Measures what a serving operator actually sees: closed-loop single-stream
+throughput (next request issues when the previous returns) and per-call
+p50/p95/p99 latency, per batch size, flat vs tree-routed probe.
+
+Hardware caveat (DESIGN.md §3): 1-core CPU container — ABSOLUTE numbers are
+a proxy; the flat-vs-tree and batch-scaling ratios are the portable signal.
+
+    PYTHONPATH=src python -m benchmarks.bench_qps [--smoke] [--out PATH]
 """
 from __future__ import annotations
 
-import time
+import argparse
 
+import jax
 import numpy as np
 
-from benchmarks.common import K, Timer, dataset, emit, index, neighbors
-from repro.core import search_numpy
+from benchmarks.common import Timer, emit
+from repro.core import true_neighbors
+from repro.data.vectors import glove_like
+from repro.serve.engine import AnnEngine
 
 
 def recall_at(ids, tn, k=10):
     return float((ids[:, :k, None] == tn[:, None, :k]).any(-1).mean())
 
 
-def main():
-    ds, tn = dataset(), neighbors()
-    for mode in ("none", "soar"):
-        idx = index(mode, pq=25)
-        for top_t in (2, 5, 10, 20, 40):
-            t0 = time.perf_counter()
-            ids, stats = search_numpy(idx, ds.Q, top_t=top_t, final_k=10,
-                                      rerank_budget=300)
-            dt = time.perf_counter() - t0
-            qps = len(ds.Q) / dt
-            r = recall_at(ids, tn, k=10)
-            emit(f"qps_{mode}_t{top_t}", dt / len(ds.Q) * 1e6,
-                 f"recall@10={r:.3f} qps={qps:.0f} "
-                 f"pts={stats.points_read.mean():.0f}")
+def _closed_loop(eng: AnnEngine, Q: np.ndarray, batch: int, reps: int):
+    """Closed-loop drive: issue `reps` batched requests back-to-back,
+    rotating through the query set. Returns (lat_us list, ids of the
+    last call)."""
+    nq = Q.shape[0]
+    lat, ids = [], None
+    for i in range(reps):
+        off = (i * batch) % max(1, nq - batch + 1)
+        qb = Q[off:off + batch]
+        with Timer() as t:
+            ids, _ = eng.search(qb, k=10)
+        lat.append(t.us)
+    return lat, ids
+
+
+def run(n: int, c: int, nq: int, train_iters: int, reps: int, label: str,
+        batches=(1, 16, 128)):
+    ds = glove_like(n=n, d=100, nq=nq)
+    tn = true_neighbors(ds.X, ds.Q, k=10)
+    for router, rkw, tag in ((None, None, "flat"),
+                             ("tree", dict(t_route=2), "tree")):
+        eng = AnnEngine.build(jax.random.PRNGKey(0), ds.X, c,
+                              spill_mode="soar", pq_subspaces=25,
+                              top_t=max(6, round(c / 200)),
+                              rerank_budget=300, router=router,
+                              router_kw=rkw, train_iters=train_iters)
+        full_ids, _ = eng.search(ds.Q, k=10)          # quality + warmup
+        rec = recall_at(full_ids, tn)
+        for b in batches:
+            _closed_loop(eng, ds.Q, b, 2)             # compile this bucket
+            lat, _ = _closed_loop(eng, ds.Q, b, reps)
+            qps = b * len(lat) / (sum(lat) / 1e6)
+            p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+            emit(f"qps_engine_{tag}_b{b}_{label}", p50 / b,
+                 f"recall@10={rec:.3f} qps={qps:.0f} p50={p50:.0f}us "
+                 f"p95={p95:.0f}us p99={p99:.0f}us batch={b}")
+
+
+def main(smoke: bool = False, out: str = ""):
+    from benchmarks import common
+    mark = len(common.ROWS)
+    if smoke:
+        run(n=10_000, c=64, nq=160, train_iters=3, reps=15, label="smoke")
+    else:
+        run(n=100_000, c=500, nq=400, train_iters=8, reps=60, label="100k")
+    if out:
+        from benchmarks.common import write_rows
+        write_rows(out, common.ROWS[mark:], smoke=smoke)
+        print(f"# wrote {len(common.ROWS) - mark} rows to {out}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down shape (n=10k)")
+    ap.add_argument("--out", default="",
+                    help="standalone JSON artifact path")
+    main(**vars(ap.parse_args()))

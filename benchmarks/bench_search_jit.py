@@ -11,7 +11,11 @@ selectivities {0.9, 0.5, 0.1, 0.01} on both engines, with recall measured
 against FILTERED exact search (the only honest comparator — unfiltered
 ground truth is unreachable by definition once a filter applies).
 
-    PYTHONPATH=src python -m benchmarks.bench_search_jit [--smoke]
+ISSUE 6 adds router rows (DESIGN.md §3.10): flat vs two-level tree probe
+(`--routers` sweeps c ∈ {1k, 8k, 32k} at n=100k and asserts the acceptance
+bar — tree ≥ 0.95x flat recall@10 at ≤ 1/4 probe FLOPs at c=32k).
+
+    PYTHONPATH=src python -m benchmarks.bench_search_jit [--smoke|--routers]
 
 `--smoke` runs a scaled-down shape (n=10k, nq=32) as a CI sanity check.
 """
@@ -151,7 +155,56 @@ def run_filtered(n: int, nq: int, c: int, top_t: int, rerank_budget: int,
              f"selectivity={sel} (vs filtered exact)")
 
 
-def main(smoke: bool = False, out: str = ""):
+def run_routers(n: int, nq: int, cs, rerank_budget: int, train_iters: int,
+                label: str, check_acceptance_c: int = 0):
+    """Router rows (ISSUE 6 / DESIGN.md §3.10): flat vs two-level tree
+    probe at growing partition counts. top_t scales with c (a roughly
+    constant candidate budget), so the probe stage's share of the work
+    grows with c — the regime the TreeRouter exists for. Each tree row's
+    derived string carries recall@10, the probe-FLOPs ratio vs flat, and
+    the relative recall; the README recall-vs-probe-cost table and the CI
+    regression gate read these rows."""
+    from repro.core.router import FlatRouter, train_tree_router
+    ds = glove_like(n=n, d=100, nq=nq)
+    tn = true_neighbors(ds.X, ds.Q, k=10)
+    Q = jnp.asarray(ds.Q)
+    for c in cs:
+        top_t = max(6, round(c / 200))
+        idx = build_ivf(jax.random.PRNGKey(1), ds.X, c, spill_mode="soar",
+                        pq_subspaces=25, train_iters=train_iters,
+                        # exact k-means++ is c sequential picks — at 8k+
+                        # centroids the k-means|| init is the only sane one
+                        init="pp" if c <= 1024 else "parallel")
+        packed = pack_ivf(idx)
+        flat = FlatRouter(packed.centroids)
+        S = max(2, int(round(c ** 0.5)))
+        tree = train_tree_router(jax.random.PRNGKey(2), idx.centroids,
+                                 n_super=S, t_route=max(2, -(-S // 8)))
+        treed = tree.device()
+        kw = dict(top_t=top_t, final_k=10, rerank_budget=rerank_budget)
+        fids, _ = search_jit(packed, Q, router=flat, **kw)   # compile+warm
+        tids, _ = search_jit(packed, Q, router=treed, **kw)
+        t_flat = _time(lambda: search_jit(packed, Q, router=flat, **kw))
+        t_tree = _time(lambda: search_jit(packed, Q, router=treed, **kw))
+        rf = recall_at(np.asarray(fids), tn)
+        rt = recall_at(np.asarray(tids), tn)
+        ratio = tree.probe_flops(top_t) / flat.probe_flops(top_t)
+        rel = rt / max(rf, 1e-9)
+        emit(f"search_router_flat_c{c}_{label}", t_flat / nq,
+             f"recall@10={rf:.3f} top_t={top_t} "
+             f"probe_flops={flat.probe_flops(top_t)}")
+        emit(f"search_router_tree_c{c}_{label}", t_tree / nq,
+             f"recall@10={rt:.3f} top_t={top_t} n_super={S} "
+             f"t_route={tree.t_route} flops_ratio={ratio:.3f} "
+             f"rel_recall={rel:.3f}")
+        if c == check_acceptance_c:
+            assert rel >= 0.95, (
+                f"tree recall {rt:.3f} < 0.95x flat {rf:.3f} at c={c}")
+            assert ratio <= 0.25, (
+                f"tree probe FLOPs {ratio:.2f}x flat exceeds 1/4 at c={c}")
+
+
+def main(smoke: bool = False, routers: bool = False, out: str = ""):
     from benchmarks import common
     mark = len(common.ROWS)
     if smoke:
@@ -160,6 +213,12 @@ def main(smoke: bool = False, out: str = ""):
             train_iters=3, label="smoke", prebuilt=pre)
         run_filtered(n=10_000, nq=32, c=64, top_t=6, rerank_budget=256,
                      train_iters=3, label="smoke", prebuilt=pre)
+        run_routers(n=10_000, nq=32, cs=(256,), rerank_budget=256,
+                    train_iters=3, label="smoke")
+    elif routers:
+        run_routers(n=100_000, nq=64, cs=(1024, 8192, 32768),
+                    rerank_budget=300, train_iters=5, label="100k",
+                    check_acceptance_c=32768)
     else:
         pre = _setup(n=100_000, nq=256, c=500, train_iters=8)
         speedup, r_new, r_seed = run(n=100_000, nq=256, c=500, top_t=10,
@@ -179,6 +238,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down CI shape (n=10k, nq=32)")
+    ap.add_argument("--routers", action="store_true",
+                    help="flat-vs-tree router sweep at c in {1k, 8k, 32k} "
+                         "(n=100k; the ISSUE 6 acceptance run)")
     ap.add_argument("--out", default="",
                     help="standalone JSON artifact path (for the CI "
                          "regression gate)")

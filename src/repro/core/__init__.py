@@ -7,6 +7,8 @@ from repro.core.ivf import IVFIndex, build_ivf, finalize_ivf  # noqa: F401
 from repro.core.build import (build_ivf_sharded, train_codebook,  # noqa: F401
                               assign_shards)
 from repro.core.mutable import MutableIVF  # noqa: F401
+from repro.core.router import (FlatRouter, TreeRouter,  # noqa: F401
+                               train_tree_router, as_router, clamp_top_t)
 from repro.core.search import search_numpy, search_jit, pack_ivf  # noqa: F401
 from repro.core.kmr import (kmr_curve, points_to_recall, true_neighbors,  # noqa: F401
                             rank_statistics, KMRCurve)

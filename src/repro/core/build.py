@@ -124,7 +124,8 @@ def build_ivf_sharded(key, X, n_partitions: int, *, spill_mode: str = "soar",
                       pq: Optional[PQCodebook] = None,
                       init: str = "pp", batch_size: Optional[int] = None,
                       timings: Optional[dict] = None,
-                      verbose: bool = False) -> IVFIndex:
+                      verbose: bool = False, router=None,
+                      router_kw: Optional[dict] = None) -> IVFIndex:
     """Scalable build: sample-trained codebook, streamed assignment shards.
 
     Drop-in replacement for `build_ivf` whose accelerator peak is
@@ -135,8 +136,14 @@ def build_ivf_sharded(key, X, n_partitions: int, *, spill_mode: str = "soar",
     `codebook=` (and optionally `pq=`) skip training and build against the
     given FROZEN stages — the path used for mutation-equivalence rebuilds
     and for re-indexing fresh data into an existing serving configuration.
+    Passing a prebuilt Router instance as `router` freezes it the same
+    way (rebuilds keep serving through the router the fleet compiled
+    against); a spec string trains anew over the (frozen or fresh)
+    codebook with a fold_in-derived key, never perturbing the kmeans/PQ
+    random streams.
     """
     from repro.core.ivf import _phase
+    from repro.core.router import as_router
 
     X = np.asarray(X, np.float32)
     kkm, kpq = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
@@ -153,6 +160,9 @@ def build_ivf_sharded(key, X, n_partitions: int, *, spill_mode: str = "soar",
         assignments = assign_shards(X, C, spill_mode=spill_mode, lam=lam,
                                     n_spills=n_spills, shard_size=shard_size,
                                     chunk=chunk, verbose=verbose)
+    with _phase(timings, "router"):
+        rt = as_router(router, C, key=jax.random.fold_in(kkm, 0x52F7),
+                       **(router_kw or {}))
     return finalize_ivf(kpq, X, C, assignments, pq_subspaces=pq_subspaces,
                         rerank=rerank, spill_mode=spill_mode, lam=lam, pq=pq,
-                        timings=timings)
+                        timings=timings, router=rt)

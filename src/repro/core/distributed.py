@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.build import build_ivf_sharded, spill_plan
+from repro.core.router import FlatRouter, TreeRouter
 from repro.core.search import (_pad_topk, dedup_topk_window, pack_ivf,
                                window_pq_scores)
 from repro.kernels.soar_assign import assign_fused
@@ -56,6 +57,42 @@ class ShardedIVFPQ(NamedTuple):
     sizes: jax.Array         # (D, c) int32
     rerank: jax.Array        # (D, n_local, d)
     local_base: jax.Array    # (D,) int32
+
+
+class ShardedTreeRouter(NamedTuple):
+    """Per-shard TreeRouter tables, stacked over the leading shard dim D
+    (each shard trains its own router over its own local centroids, like
+    its own codebook). Shards are padded to the common (S, cmax) envelope:
+    pad supers are zero rows whose children are all -1, so selecting one
+    contributes only -inf candidates (a wasted route slot, never a wrong
+    result)."""
+    super_centroids: jax.Array   # (D, S, d)
+    children: jax.Array          # (D, S, cmax) int32 local partitions, -1 pad
+    child_centroids: jax.Array   # (D, S, cmax, d)
+
+
+def stack_tree_routers(routers) -> ShardedTreeRouter:
+    """Stack per-shard TreeRouters (e.g. `idx.router` of each shard built
+    with router="tree") into the sharded envelope for the
+    `with_router=True` distributed search paths."""
+    S = max(r.n_super for r in routers)
+    cmax = max(r.cmax for r in routers)
+    d = routers[0].d
+    D = len(routers)
+    SC = np.zeros((D, S, d), np.float32)
+    CH = np.full((D, S, cmax), -1, np.int32)
+    CC = np.zeros((D, S, cmax, d), np.float32)
+    for i, r in enumerate(routers):
+        SC[i, :r.n_super] = np.asarray(r.super_centroids)
+        CH[i, :r.n_super, :r.cmax] = np.asarray(r.children)
+        CC[i, :r.n_super, :r.cmax] = np.asarray(r.child_centroids)
+    return ShardedTreeRouter(jnp.asarray(SC), jnp.asarray(CH),
+                             jnp.asarray(CC))
+
+
+def tree_router_pspecs(axes: Tuple[str, ...]) -> ShardedTreeRouter:
+    a = axes if len(axes) > 1 else axes[0]
+    return ShardedTreeRouter(P(a), P(a), P(a))
 
 
 def _resolve_shard(idx):
@@ -223,33 +260,75 @@ def shard_filters(global_mask, n_locals) -> jax.Array:
     return stack_filters(out)
 
 
+def _local_router(C, srt, t_route):
+    """Per-shard probe router inside shard_map: the shard's stacked tree
+    tables when given (squeezing the size-1 lead dim), else the flat probe
+    over the local centroids — op-for-op the historical inline GEMM."""
+    if srt is None:
+        return FlatRouter(C)
+    S = srt.super_centroids.shape[1]
+    return TreeRouter(srt.super_centroids[0], srt.children[0],
+                      srt.child_centroids[0],
+                      t_route=t_route or max(1, -(-S // 8)),
+                      n_partitions=C.shape[0])
+
+
+def _shard_map_variants(local_search, mesh, spec, axes, with_filter,
+                        with_router):
+    """shard_map wiring shared by both distributed search makers: the
+    optional filter bitmap and router-table args extend in_specs in a
+    fixed order (ivf, Q[, filt][, router])."""
+    from jax.experimental.shard_map import shard_map
+
+    a = axes if len(axes) > 1 else axes[0]
+    specs = [spec, P()]
+    if with_filter:
+        specs.append(P(a))
+    if with_router:
+        specs.append(tree_router_pspecs(axes))
+    fn = {
+        (False, False): lambda ivf, Q: local_search(ivf, Q),
+        (True, False): lambda ivf, Q, f: local_search(ivf, Q, f),
+        (False, True): lambda ivf, Q, r: local_search(ivf, Q, None, r),
+        (True, True): local_search,
+    }[(with_filter, with_router)]
+    return shard_map(fn, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=(P(), P()), check_rep=False)
+
+
 def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
                             final_k: int, multiplicity: int = 2,
-                            with_filter: bool = False):
+                            with_filter: bool = False,
+                            with_router: bool = False,
+                            t_route: Optional[int] = None):
     """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global.
 
     Pass multiplicity ≥ 1 + n_spills when serving multi-spill shards
     (dedup_topk_window's correctness bound); default 2 covers the
     single-spill "naive"/"soar" builds.
 
-    with_filter=True: the returned fn takes a third argument — a (D, n_local)
+    with_filter=True: the returned fn takes an extra argument — a (D, n_local)
     uint8 LOCAL-id bitmap (stack_filters / shard_filters), sharded like the
     index — and masks candidates per gathered window before dedup, exactly
     the §3.9 subset semantics of the single-host engines.
-    """
-    from jax.experimental.shard_map import shard_map
 
-    def local_search(ivf: ShardedIVF, Q, filt=None):
+    with_router=True: the fn takes a trailing ShardedTreeRouter argument
+    (stack_tree_routers over the shards' build-time routers) and probes
+    through each shard's two-level router at the given `t_route` (default
+    ceil(S/8)) instead of the flat local GEMM — the per-shard O(c)→O(√c)
+    probe reduction, shard-local like everything else.
+    """
+    def local_search(ivf: ShardedIVF, Q, filt=None, srt=None):
         # leading shard dim is size 1 inside shard_map — squeeze it
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]
         rerank = ivf.rerank[0]
         base = ivf.local_base[0]
 
-        # batched: one centroid GEMM, then candidate-local dedup — no
+        # batched: one router probe, then candidate-local dedup — no
         # intermediate scales with the shard size (DESIGN.md §3.6)
-        sc = Q @ C.T                                       # (nq, c)
-        _, parts = jax.lax.top_k(sc, min(top_t, C.shape[0]))
+        router = _local_router(C, srt, t_route)
+        _, parts = router.route(Q, router.clamp(top_t))
         ids = part_ids[parts].reshape(Q.shape[0], -1)      # (nq, t·pmax) local
         valid = ids >= 0
         if filt is not None:
@@ -277,37 +356,32 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         v, pos = jax.lax.top_k(flat_v, final_k)
         return jnp.take_along_axis(flat_i, pos, axis=1), v
 
-    spec = sharded_ivf_pspecs(axes)
-    a = axes if len(axes) > 1 else axes[0]
-    if with_filter:
-        return shard_map(local_search, mesh=mesh,
-                         in_specs=(spec, P(), P(a)), out_specs=(P(), P()),
-                         check_rep=False)
-    return shard_map(lambda ivf, Q: local_search(ivf, Q), mesh=mesh,
-                     in_specs=(spec, P()), out_specs=(P(), P()),
-                     check_rep=False)
+    return _shard_map_variants(local_search, mesh, sharded_ivf_pspecs(axes),
+                               axes, with_filter, with_router)
 
 
 def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
                                final_k: int, rerank_k: int = 256,
                                q_chunk: int = 128, multiplicity: int = 2,
-                               with_filter: bool = False):
+                               with_filter: bool = False,
+                               with_router: bool = False,
+                               t_route: Optional[int] = None):
     """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
 
     Per shard per q_chunk tile: batched centroid top-t → PQ-score the
     gathered t·pmax candidate windows from their uint8 codes (Pallas one-hot
-    MXU kernel on TPU, + the centroid score as the coarse term) →
-    candidate-local dedup-by-max + top rerank_k over the window → exact
-    rerank of only those from the float data → local top-k → global
-    all_gather merge. Tiles stream through lax.map to bound the live
-    candidate buffers (baseline peaked at 16 GiB gathering f32 candidates).
+    MXU kernel on TPU, + the router's coarse score) → candidate-local
+    dedup-by-max + top rerank_k over the window → exact rerank of only
+    those from the float data → local top-k → global all_gather merge.
+    Tiles stream through lax.map to bound the live candidate buffers
+    (baseline peaked at 16 GiB gathering f32 candidates).
 
     with_filter as in make_distributed_search: fn gains a (D, n_local)
     uint8 local-id bitmap argument masking candidates pre-dedup.
+    with_router/t_route as in make_distributed_search: a trailing
+    ShardedTreeRouter argument replaces the flat local probe.
     """
-    from jax.experimental.shard_map import shard_map
-
-    def local_search(ivf: ShardedIVFPQ, Q, filt=None):
+    def local_search(ivf: ShardedIVFPQ, Q, filt=None, srt=None):
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]
         part_codes = ivf.part_codes[0]
@@ -318,18 +392,19 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
         m = pqc.shape[0]
         s = pqc.shape[2]
         pmax = part_ids.shape[1]
-        tt = min(top_t, C.shape[0])
+        router = _local_router(C, srt, t_route)
+        tt = router.clamp(top_t)
 
         def tile(Qb):                                      # (bq, d)
-            sc = Qb @ C.T                                  # (bq, c)
-            psc, parts = jax.lax.top_k(sc, tt)
+            psc, parts = router.route(Qb, tt)
             bq = Qb.shape[0]
+            tw = parts.shape[-1]         # router may return fewer than tt
             ids = part_ids[parts].reshape(bq, -1)          # (bq, t·pmax)
             valid = ids >= 0
             if fbits is not None:
                 valid = valid & (fbits[jnp.maximum(ids, 0)] > 0)
                 ids = jnp.where(valid, ids, -1)
-            codes = part_codes[parts].reshape(bq, tt * pmax, m)
+            codes = part_codes[parts].reshape(bq, tw * pmax, m)
             luts = jnp.einsum("qms,mks->qmk", Qb.reshape(bq, m, s), pqc)
             approx = window_pq_scores(luts, codes)
             approx = approx + jnp.repeat(psc, pmax, axis=-1)
@@ -361,15 +436,9 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
         v, pos = jax.lax.top_k(flat_v, final_k)
         return jnp.take_along_axis(flat_i, pos, axis=1), v
 
-    spec = sharded_ivf_pq_pspecs(axes)
-    a = axes if len(axes) > 1 else axes[0]
-    if with_filter:
-        return shard_map(local_search, mesh=mesh,
-                         in_specs=(spec, P(), P(a)), out_specs=(P(), P()),
-                         check_rep=False)
-    return shard_map(lambda ivf, Q: local_search(ivf, Q), mesh=mesh,
-                     in_specs=(spec, P()), out_specs=(P(), P()),
-                     check_rep=False)
+    return _shard_map_variants(local_search, mesh,
+                               sharded_ivf_pq_pspecs(axes), axes,
+                               with_filter, with_router)
 
 
 def sharded_from_indexes_pq(indexes) -> ShardedIVFPQ:

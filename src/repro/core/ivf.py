@@ -45,6 +45,9 @@ class IVFIndex:
     n_points: int
     spill_mode: str                # "none" | "naive" | "soar"
     lam: float
+    # optional probe-stage Router (core/router.py) trained at build time
+    # and serialized with the index; None → flat probe (historical)
+    router: Optional[object] = None
 
     @property
     def n_assignments(self) -> int:
@@ -155,7 +158,8 @@ def finalize_ivf(kpq, X, C, assignments: np.ndarray, *, pq_subspaces: int = 0,
                  lam: float = 1.0, pq: Optional[PQCodebook] = None,
                  encode_chunk: int = 16_384,
                  fused_encode: Optional[bool] = None,
-                 timings: Optional[dict] = None) -> IVFIndex:
+                 timings: Optional[dict] = None,
+                 router=None) -> IVFIndex:
     """CSR + residual-PQ + rerank assembly shared by every build path
     (monolithic `build_ivf`, sharded `core/build.py`, mutation compaction).
 
@@ -241,7 +245,8 @@ def finalize_ivf(kpq, X, C, assignments: np.ndarray, *, pq_subspaces: int = 0,
     return IVFIndex(
         centroids=Ch, starts=starts, point_ids=point_ids,
         codes=codes, pq=pq, rerank_int8=rerank_int8, rerank_f32=rerank_f32,
-        assignments=assignments, n_points=n, spill_mode=spill_mode, lam=lam)
+        assignments=assignments, n_points=n, spill_mode=spill_mode, lam=lam,
+        router=router)
 
 
 def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
@@ -249,7 +254,8 @@ def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
               rerank: str = "f32", train_iters: int = 15,
               anisotropic_T: float = 0.0, verbose: bool = False,
               init: str = "pp", batch_size: Optional[int] = None,
-              timings: Optional[dict] = None) -> IVFIndex:
+              timings: Optional[dict] = None, router=None,
+              router_kw: Optional[dict] = None) -> IVFIndex:
     """Train VQ + (optionally) spilled assignments + PQ, build the index.
 
     spill_mode: "none" (plain IVF), "naive" (2nd-closest centroid),
@@ -263,8 +269,16 @@ def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
     (`kernels/soar_assign.py::assign_fused`) — one shared X·Cᵀ GEMM, no
     separate train-then-spill passes. `init`/`batch_size` expose the
     flagged k-means|| / mini-batch training modes (exact path default).
+
+    router: probe-stage router spec — None (flat inline, nothing stored),
+    "tree" (train a TreeRouter over the centroids; `router_kw` forwards
+    n_super/t_route/iters), "flat", or a prebuilt Router instance (the
+    frozen-router rebuild contract). Trained AFTER VQ with a key derived
+    via fold_in, so passing router never perturbs the kmeans/PQ streams
+    (build outputs stay bitwise-identical).
     """
     from repro.core.build import spill_plan
+    from repro.core.router import as_router
 
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
@@ -302,6 +316,10 @@ def build_ivf(key, X, n_partitions: int, spill_mode: str = "soar",
             assignments = np.asarray(assign_fused(X, C, lam=eff_lam,
                                                   n_spills=eff_spills))
 
+    with _phase(timings, "router"):
+        rt = as_router(router, np.asarray(C),
+                       key=jax.random.fold_in(kkm, 0x52F7),
+                       **(router_kw or {}))
     return finalize_ivf(kpq, X, C, assignments, pq_subspaces=pq_subspaces,
                         rerank=rerank, spill_mode=spill_mode, lam=lam,
-                        timings=timings)
+                        timings=timings, router=rt)

@@ -227,7 +227,12 @@ def train_kmeans(key, X, c: int, iters: int = 15, chunk: int = 8192,
     if init == "pp":
         C = kmeans_pp_init(kinit, Xi, c)
     elif init == "parallel":
-        C = kmeans_parallel_init(kinit, Xi, c, l=int(init_oversample * c),
+        # the per-round oversample can never exceed the candidate pool
+        # (Gumbel top-l is without replacement over the init sample) —
+        # c within 1/init_oversample of the sample size crashed top_k
+        C = kmeans_parallel_init(kinit, Xi, c,
+                                 l=min(int(init_oversample * c),
+                                       int(Xi.shape[0])),
                                  rounds=init_rounds)
     else:
         raise ValueError(f"unknown init {init!r}")

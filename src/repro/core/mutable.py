@@ -81,6 +81,10 @@ class MutableIVF:
     n_dead_slots: int = 0
     n_soft_deleted: int = 0             # alive=False but slots NOT blanked
     compact_threshold: float = 0.25
+    # probe-stage Router (core/router.py), FROZEN like the codebooks:
+    # online `add` routes through the build-time tables untouched; snapshots
+    # serve a derived view with emptied partitions pruned (_serving_router)
+    router: Optional[object] = None
     _packed: Optional[PackedIVF] = field(default=None, repr=False)
     _packed_pair: Optional[bool] = field(default=None, repr=False)
     _csr: Optional[IVFIndex] = field(default=None, repr=False)
@@ -93,6 +97,10 @@ class MutableIVF:
     _alive_epoch: int = field(default=0, repr=False)
     _filter_dev: Optional[jax.Array] = field(default=None, repr=False)
     _filter_epoch: int = field(default=-1, repr=False)
+    # serving-router cache, keyed by the live-partition mask (see
+    # _serving_router)
+    _router_dev: Optional[object] = field(default=None, repr=False)
+    _router_key: Optional[bytes] = field(default=None, repr=False)
 
     # ------------------------------------------------------------ builders
     @classmethod
@@ -125,7 +133,7 @@ class MutableIVF:
             rerank=np.ascontiguousarray(data, dtype=np.float32),
             assignments=np.asarray(idx.assignments, np.int32).copy(),
             alive=np.ones(idx.n_points, bool), n_total=idx.n_points,
-            compact_threshold=compact_threshold)
+            compact_threshold=compact_threshold, router=idx.router)
 
     @classmethod
     def build(cls, key, X, n_partitions: int, **kw) -> "MutableIVF":
@@ -389,6 +397,27 @@ class MutableIVF:
         return out
 
     # ------------------------------------------------------------ snapshots
+    def _serving_router(self):
+        """Router view served by snapshots — the frozen-router analogue of
+        the frozen codebook: the build-time tables never retrain, but a
+        TreeRouter is REFRESHED against the current live-partition mask
+        (children of partitions whose every slot is tombstoned prune to
+        -1, so probe slots are not wasted reaching empty partitions after
+        heavy deletion/compaction churn). Cached by the mask, so steady-
+        state packs pay a c-bit compare, and an `add` that repopulates an
+        emptied partition un-prunes it on the next snapshot."""
+        if self.router is None:
+            return None
+        live = (self.part_ids >= 0).any(axis=1)
+        key = live.tobytes()
+        if self._router_dev is None or self._router_key != key:
+            rt = self.router
+            if hasattr(rt, "pruned"):
+                rt = rt.pruned(live)
+            self._router_dev = rt.device()
+            self._router_key = key
+        return self._router_dev
+
     def _apply_pack_delta(self, p: PackedIVF) -> PackedIVF:
         """Scatter only the dirty partition rows / appended rerank rows
         into the cached device snapshot.
@@ -425,7 +454,7 @@ class MutableIVF:
         self._dirty_parts[:] = False
         self._dirty_ids = self.n_total
         return PackedIVF(p.centroids, part_ids, part_codes, part_codes2,
-                         sizes, self.pq, rerank)
+                         sizes, self.pq, rerank, self._serving_router())
 
     def pack(self, pair_codes: Optional[bool] = None) -> PackedIVF:
         """Padded snapshot for the candidate-local jit pipeline (cached;
@@ -455,7 +484,7 @@ class MutableIVF:
             (jnp.asarray(_paired_codes(codes))
              if codes is not None and pair_codes else None),
             jnp.asarray(live_sizes), self.pq,
-            jnp.asarray(self.rerank))
+            jnp.asarray(self.rerank), self._serving_router())
         self._packed_pair = pair_codes
         self._dirty_parts = np.zeros(ids.shape[0], bool)
         self._dirty_ids = self.n_total
@@ -481,7 +510,8 @@ class MutableIVF:
             codes=codes, pq=self.pq, rerank_int8=None,
             rerank_f32=self.rerank[:self.n_total],
             assignments=self.assignments[:self.n_total],
-            n_points=self.n_total, spill_mode=self.spill_mode, lam=self.lam)
+            n_points=self.n_total, spill_mode=self.spill_mode, lam=self.lam,
+            router=self._serving_router())
         return self._csr
 
     def rebuild_reference(self, key=None) -> IVFIndex:
@@ -492,4 +522,4 @@ class MutableIVF:
             key, self.rerank[live], self.centroids.shape[0],
             spill_mode=self.spill_mode, lam=self.lam,
             n_spills=max(self.n_spills, 1), codebook=self.centroids,
-            pq=self.pq)
+            pq=self.pq, router=self.router)

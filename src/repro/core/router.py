@@ -1,0 +1,334 @@
+"""Pluggable partition-probe routing (DESIGN.md §3.10).
+
+Every search path used to hardcode the probe stage as a flat
+``Q @ centroids.T`` GEMM plus top-t — duplicated (with three different
+clamping/escalation behaviors) across the numpy engine, the jit engine,
+and both distributed local-search paths. That inlined GEMM is the O(c)
+cost ceiling the SPANN-style scale plan has to remove before partitions
+can multiply: many smaller partitions are only affordable if choosing
+them costs o(c).
+
+This module makes the probe stage a first-class ``Router``:
+
+- ``FlatRouter``: the exact flat GEMM + top-t, op-for-op identical to the
+  pre-refactor inline code on both engines (bitwise probe sets, pinned by
+  tests/test_router.py) — the default everywhere, so existing traces,
+  jaxpr pins, and committed baselines are unchanged;
+- ``TreeRouter``: a two-level k-means-over-centroids router (SPANN's
+  "small index over the centroids"): score ``t_route`` super-clusters,
+  then top-t among only their children — O(S·d + t_route·cmax·d) per
+  query instead of O(c·d), which unlocks configs with 8-32x more,
+  smaller partitions at a fraction of the probe FLOPs.
+
+Routers are jax pytrees (array leaves + static aux), so they pass
+straight through jit boundaries; every router answers both engines
+(``route`` traced / ``route_numpy`` host) and owns the clamping and
+filtered-escalation policy the call sites used to duplicate:
+
+- ``clamp``: the single source of the ``top_t = min(top_t, c)`` rule;
+- ``escalated``: one doubling step of the selectivity-escalation ladder —
+  flat doubles top_t; tree doubles BOTH top_t and t_route, so escalation
+  widens the reachable candidate set, not just the cut within it.
+
+The route contract: ``route(Q, top_t) -> (scores (nq, t'), parts
+(nq, t'))`` with partitions ordered by descending score and
+``t' = min(top_t, reachable)``. A starved slot (tree router with fewer
+reachable children than top_t) carries score ``-inf`` and partition 0 —
+downstream the PQ path adds the -inf coarse score (candidates never
+surface) and the exact path at worst re-probes partition 0's window
+(duplicates dedup away), so results stay valid.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def clamp_top_t(top_t: int, n_partitions: int) -> int:
+    """THE probe-width clamp (`argpartition` needs kth < c, `lax.top_k`
+    width <= c). Previously duplicated — with drift — in search_numpy,
+    _search_block, and AnnEngine; every entry point now routes through
+    here (regression-pinned by tests/test_router.py)."""
+    return max(0, min(int(top_t), int(n_partitions)))
+
+
+def check_query_dim(Q, d: int, what: str = "index centroids"):
+    """Clear ValueError instead of an opaque GEMM broadcast error when the
+    query dimensionality does not match the index."""
+    qd = Q.shape[-1] if getattr(Q, "ndim", 1) else None
+    if qd != d:
+        raise ValueError(
+            f"query feature dim {qd} does not match {what} dim {d} "
+            f"(Q.shape={tuple(Q.shape)})")
+
+
+@jax.tree_util.register_pytree_node_class
+class FlatRouter:
+    """Exact flat probe: one Q·Cᵀ GEMM + top-t. Bitwise-identical to the
+    pre-refactor inline code on both engines."""
+
+    def __init__(self, centroids):
+        self.centroids = centroids
+
+    def tree_flatten(self):
+        return (self.centroids,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0])
+
+    @property
+    def n_partitions(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.centroids.shape[1])
+
+    def clamp(self, top_t: int) -> int:
+        return clamp_top_t(top_t, self.n_partitions)
+
+    def can_escalate(self, top_t: int) -> bool:
+        return top_t < self.n_partitions
+
+    def escalated(self, top_t: int):
+        """One escalation step: doubled top_t, same router."""
+        return self, self.clamp(2 * top_t)
+
+    def probe_flops(self, top_t: int) -> int:
+        """Per-query probe-stage multiply count (the O(c) ceiling)."""
+        return self.n_partitions * self.d
+
+    def device(self) -> "FlatRouter":
+        """jnp-backed copy (pack-time upload for the jit serving path)."""
+        return FlatRouter(jnp.asarray(self.centroids))
+
+    def route(self, Q, top_t: int):
+        """(nq, d) -> (scores (nq, t), parts (nq, t)), score-descending.
+        EXACTLY the ops of the pre-refactor inline probe (jaxpr-pinned)."""
+        scores_c = Q @ self.centroids.T                    # (nq, c) one GEMM
+        return jax.lax.top_k(scores_c, top_t)
+
+    def route_numpy(self, Q, top_t: int):
+        """Host probe, op-for-op the pre-refactor `_search_numpy_pass`
+        head: argpartition + score-descending reorder (bitwise probe
+        sets; pinned by tests/test_router.py)."""
+        C = np.asarray(self.centroids)
+        scores_c = Q @ C.T                                 # (nq, c)
+        top_parts = np.argpartition(-scores_c, top_t - 1,
+                                    axis=1)[:, :top_t]
+        row = np.arange(Q.shape[0])[:, None]
+        ordsel = np.argsort(-scores_c[row, top_parts], axis=1)
+        top_parts = top_parts[row, ordsel]
+        return scores_c[row, top_parts], top_parts
+
+
+@jax.tree_util.register_pytree_node_class
+class TreeRouter:
+    """Two-level centroid router: k-means over the centroids themselves.
+
+    Arrays (pytree leaves):
+      super_centroids: (S, d) f32 — the second-level codebook;
+      children:        (S, cmax) int32 partition ids per super, -1 pad;
+      child_centroids: (S, cmax, d) f32 — centroid rows grouped by super
+                       (zeros at padding; masked by children >= 0).
+
+    Static aux: t_route (supers probed per query), n_partitions (the
+    total partition count c, for the clamp/escalation policy).
+
+    route = top-t_route supers by one (nq, S) GEMM, then top-t among only
+    their children — per-query probe FLOPs S·d + t_route·cmax·d vs c·d
+    flat. At t_route = S every child is scored and routing degrades to
+    exact flat routing (same probe sets; property-pinned).
+    """
+
+    def __init__(self, super_centroids, children, child_centroids,
+                 t_route: int, n_partitions: int):
+        self.super_centroids = super_centroids
+        self.children = children
+        self.child_centroids = child_centroids
+        self.t_route = int(t_route)
+        self._n_partitions = int(n_partitions)
+        self._host = None          # lazy (SC, CH, CC) numpy mirror
+
+    def tree_flatten(self):
+        return ((self.super_centroids, self.children, self.child_centroids),
+                (self.t_route, self._n_partitions))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, t_route=aux[0], n_partitions=aux[1])
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def n_partitions(self) -> int:
+        return self._n_partitions
+
+    @property
+    def n_super(self) -> int:
+        return int(self.super_centroids.shape[0])
+
+    @property
+    def cmax(self) -> int:
+        return int(self.children.shape[1])
+
+    @property
+    def d(self) -> int:
+        return int(self.super_centroids.shape[1])
+
+    @property
+    def eff_t_route(self) -> int:
+        return max(1, min(self.t_route, self.n_super))
+
+    def clamp(self, top_t: int) -> int:
+        return clamp_top_t(top_t, self.n_partitions)
+
+    def can_escalate(self, top_t: int) -> bool:
+        # escalation can widen the cut (top_t) OR the reachable set
+        # (t_route); exhausted only when both are maxed
+        return (top_t < self.n_partitions
+                or self.eff_t_route < self.n_super)
+
+    def escalated(self, top_t: int):
+        """One escalation step THROUGH the router: doubled top_t and
+        doubled t_route — a thin filtered window needs more reachable
+        partitions, not just a wider cut among the same children."""
+        return (self.with_t_route(min(2 * self.eff_t_route, self.n_super)),
+                self.clamp(2 * top_t))
+
+    def with_t_route(self, t_route: int) -> "TreeRouter":
+        return TreeRouter(self.super_centroids, self.children,
+                          self.child_centroids, t_route=t_route,
+                          n_partitions=self._n_partitions)
+
+    def probe_flops(self, top_t: int) -> int:
+        return self.d * (self.n_super + self.eff_t_route * self.cmax)
+
+    def device(self) -> "TreeRouter":
+        """jnp-backed copy (pack-time upload for the jit serving path)."""
+        return TreeRouter(jnp.asarray(self.super_centroids),
+                          jnp.asarray(self.children),
+                          jnp.asarray(self.child_centroids),
+                          t_route=self.t_route,
+                          n_partitions=self._n_partitions)
+
+    def pruned(self, live) -> "TreeRouter":
+        """Drop children whose partitions hold no live slots (-1 them),
+        so probe slots are not wasted on empty partitions — the router
+        refresh hook MutableIVF runs at snapshot time after compaction /
+        tombstone churn. `live` is a (c,) bool host array. The trained
+        tables stay frozen; pruning is a derived view."""
+        ch = np.asarray(self.children)
+        live = np.asarray(live, bool)
+        keep = (ch >= 0) & live[np.maximum(ch, 0)]
+        if keep.all():
+            return self
+        return TreeRouter(self.super_centroids,
+                          np.where(keep, ch, -1).astype(np.int32),
+                          self.child_centroids, t_route=self.t_route,
+                          n_partitions=self._n_partitions)
+
+    # ------------------------------------------------------------ routing
+    def route(self, Q, top_t: int):
+        """Traced two-level probe. Dispatches to the fused Pallas kernel
+        on TPU (kernels/tree_route.py), the chunked jnp reference
+        elsewhere; final top-t over the (nq, t_route·cmax) candidate
+        scores happens here either way."""
+        from repro.kernels.tree_route import tree_route
+        scores, cand = tree_route(Q, self.super_centroids,
+                                  self.child_centroids, self.children,
+                                  t_route=self.eff_t_route)
+        k = min(top_t, scores.shape[-1])
+        v, pos = jax.lax.top_k(scores, k)
+        parts = jnp.take_along_axis(cand, pos, axis=-1)
+        # starved slots (fewer reachable children than top_t): partition 0
+        # with a -inf score — see the module docstring's contract
+        return v, jnp.maximum(parts, 0)
+
+    def _host_arrays(self):
+        if self._host is None:
+            self._host = (np.asarray(self.super_centroids),
+                          np.asarray(self.children),
+                          np.asarray(self.child_centroids))
+        return self._host
+
+    def route_numpy(self, Q, top_t: int):
+        SC, CH, CC = self._host_arrays()
+        nq = Q.shape[0]
+        tr = self.eff_t_route
+        ss = Q @ SC.T                                      # (nq, S)
+        sup = np.argpartition(-ss, tr - 1, axis=1)[:, :tr]
+        cand = CH[sup].reshape(nq, -1)                     # (nq, tr·cmax)
+        cc = CC[sup].reshape(nq, cand.shape[1], -1)
+        sc = np.einsum("qkd,qd->qk", cc, Q)
+        sc[cand < 0] = -np.inf
+        k = min(top_t, cand.shape[1])
+        row = np.arange(nq)[:, None]
+        topc = np.argpartition(-sc, k - 1, axis=1)[:, :k]
+        ordsel = np.argsort(-sc[row, topc], axis=1)
+        topc = topc[row, ordsel]
+        return sc[row, topc], np.maximum(cand[row, topc], 0)
+
+
+def train_tree_router(key, centroids, n_super: Optional[int] = None,
+                      t_route: Optional[int] = None, iters: int = 8
+                      ) -> TreeRouter:
+    """Two-level router training: k-means over the c centroids via the
+    SAME fused Lloyd sweep as the main build (kernels/lloyd.py through
+    core/kmeans.train_kmeans — one scan per iteration, nothing (c, S)-
+    shaped materialized), then an exact Euclidean child assignment and a
+    counting-sort grouping into the padded (S, cmax) children table.
+
+    Defaults: n_super = round(sqrt(c)) (the O(sqrt(c)) balance point),
+    t_route = ceil(n_super / 8) (probe ~1/8 of the supers; the recall/
+    FLOPs benches sweep this).
+    """
+    from repro.core.kmeans import assign_euclidean, train_kmeans
+
+    C = np.asarray(centroids, np.float32)
+    c, d = C.shape
+    S = int(n_super) if n_super else max(1, int(round(math.sqrt(c))))
+    S = min(S, c)
+    if t_route is None:
+        t_route = max(1, -(-S // 8))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if S >= c:                      # degenerate: every centroid its own super
+        SC = C.copy()
+        assign = np.arange(c, dtype=np.int32)
+    else:
+        km = train_kmeans(key, C, S, iters=iters, final_assign=False)
+        SC = np.asarray(km.centroids, np.float32)
+        assign = np.asarray(assign_euclidean(jnp.asarray(C),
+                                             jnp.asarray(SC)))
+    counts = np.bincount(assign, minlength=S)
+    cmax = max(1, int(counts.max()))
+    children = np.full((S, cmax), -1, np.int32)
+    order = np.argsort(assign, kind="stable")
+    sp = assign[order]
+    pos = np.arange(c) - np.searchsorted(sp, sp)
+    children[sp, pos] = order.astype(np.int32)
+    child_centroids = np.zeros((S, cmax, d), np.float32)
+    child_centroids[sp, pos] = C[order]
+    return TreeRouter(SC, children, child_centroids,
+                      t_route=int(t_route), n_partitions=c)
+
+
+def as_router(spec, centroids, key=None, **kw):
+    """Resolve a router spec at build time: None -> None (flat inline
+    behavior, nothing stored), "flat" -> FlatRouter over the index's own
+    centroids, "tree" -> train_tree_router(**kw), or pass a Router
+    instance through (the frozen-router rebuild contract)."""
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        if spec == "flat":
+            return FlatRouter(np.asarray(centroids, np.float32))
+        if spec == "tree":
+            return train_tree_router(key, centroids, **kw)
+        raise ValueError(f"unknown router spec {spec!r}")
+    return spec

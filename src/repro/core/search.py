@@ -24,6 +24,15 @@ per query — so the candidate-local invariant survives filtering, and a
 selectivity-adaptive probe escalation (host-driven re-probe loop in the
 numpy engine, one fixed doubled-top_t second pass in the jit engine)
 rescues queries whose surviving window is thinner than the rerank budget.
+
+The partition-probe stage of both engines is a pluggable `Router`
+(core/router.py, DESIGN.md §3.10): the default `FlatRouter` reproduces
+the historical inline `Q @ centroids.T` + top-t op-for-op (bitwise probe
+sets, so the jaxpr/HLO pins and committed baselines are unchanged), and
+`TreeRouter` replaces the O(c) GEMM with a two-level O(√c·t_route) probe.
+Clamping and filtered escalation are router policy — the escalation
+paths below ask the router for the next (router, top_t) step instead of
+hardcoding the doubling.
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ivf import IVFIndex
+from repro.core.router import FlatRouter, check_query_dim
 from repro.quant.pq import pq_lut, PQCodebook
 
 
@@ -43,13 +53,17 @@ class SearchStats(NamedTuple):
     unique_candidates: np.ndarray
 
 
-def _ragged_gather(starts: np.ndarray, top_parts: np.ndarray):
+def _ragged_gather(starts: np.ndarray, top_parts: np.ndarray,
+                   part_scores: np.ndarray):
     """Batch-level CSR gather: one flat index vector for every (query,
     partition) segment in the batch.
 
-    Returns (cand_rows, qidx, seg_part, row_lens): flat CSR row of each
-    candidate, its query, its source partition, and per-query totals.
-    """
+    Returns (cand_rows, qidx, seg_score, row_lens): flat CSR row of each
+    candidate, its query, its source partition's ROUTER score (the coarse
+    <q, centroid> term the PQ stage adds back), and per-query totals.
+    Broadcasting the router's (nq, t) scores here is what lets the probe
+    stage avoid materializing the full (nq, c) score matrix for routers
+    that never compute it (TreeRouter)."""
     nq, t = top_parts.shape
     seg_starts = starts[top_parts].ravel()                       # (nq*t,)
     seg_lens = (starts[top_parts + 1] - starts[top_parts]).ravel()
@@ -60,8 +74,9 @@ def _ragged_gather(starts: np.ndarray, top_parts: np.ndarray):
                                                                 seg_lens)
     row_lens = seg_lens.reshape(nq, t).sum(axis=1)
     qidx = np.repeat(np.arange(nq, dtype=np.int64), row_lens)
-    seg_part = np.repeat(top_parts.ravel(), seg_lens)
-    return cand_rows, qidx, seg_part, row_lens
+    seg_score = np.repeat(np.asarray(part_scores, np.float32).ravel(),
+                          seg_lens)
+    return cand_rows, qidx, seg_score, row_lens
 
 
 def _group_ranks(group: np.ndarray, n_groups: int) -> np.ndarray:
@@ -73,7 +88,7 @@ def _group_ranks(group: np.ndarray, n_groups: int) -> np.ndarray:
 def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
                  final_k: int = 10, rerank_budget: int = 0,
                  filter_mask: Optional[np.ndarray] = None,
-                 escalate: bool = True):
+                 escalate: bool = True, router=None):
     """Returns (ids (nq, final_k), SearchStats). rerank_budget=0 → exact
     scoring of all candidates (no PQ stage).
 
@@ -88,12 +103,20 @@ def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
     budget (rerank_budget with a PQ stage, else final_k — the same signal
     as the jit engine, additionally capped at the filter's population so a
     subset smaller than the budget stops escalating once fully found)
-    re-probe with doubled top_t — host-driven, repeated until satisfied or
-    every partition is probed, so very selective filters degrade toward
-    filtered brute force instead of returning starved windows.
+    re-probe through the router's escalation ladder (doubled top_t; a
+    TreeRouter also doubles t_route) — host-driven, repeated until
+    satisfied or the router is exhausted, so very selective filters
+    degrade toward filtered brute force instead of returning starved
+    windows.
+
+    router: probe-stage Router (core/router.py); default is the index's
+    build-time router, else the flat probe (historical behavior, bitwise).
     """
     Q = np.asarray(Q, np.float32)
-    top_t = min(top_t, index.n_partitions)   # argpartition kth ∈ [0, c)
+    if router is None:
+        router = index.router or FlatRouter(index.centroids)
+    check_query_dim(Q, index.centroids.shape[1])
+    top_t = router.clamp(top_t)              # argpartition kth ∈ [0, c)
     fm = None
     if filter_mask is not None:
         mm = np.asarray(filter_mask).astype(bool).ravel()[:index.n_points]
@@ -103,47 +126,44 @@ def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
     if data is None:
         from repro.quant.int8 import int8_dequantize
         data = np.asarray(int8_dequantize(index.rerank_int8))
-    out, row_lens, uniq = _search_numpy_pass(index, Q, data, top_t, final_k,
-                                             rerank_budget, fm)
+    out, row_lens, uniq = _search_numpy_pass(index, Q, data, router, top_t,
+                                             final_k, rerank_budget, fm)
     if fm is not None and escalate:
         use_pq = index.codes is not None and rerank_budget > 0
         thresh = min(rerank_budget if use_pq else final_k, int(fm.sum()))
-        t, c = top_t, index.n_partitions
+        r, t = router, top_t
         thin = np.flatnonzero(uniq < thresh)
-        while thin.size and t < c:
-            t = min(2 * t, c)
-            o2, r2, u2 = _search_numpy_pass(index, Q[thin], data, t, final_k,
-                                            rerank_budget, fm)
+        while thin.size and r.can_escalate(t):
+            r, t = r.escalated(t)
+            o2, r2, u2 = _search_numpy_pass(index, Q[thin], data, r, t,
+                                            final_k, rerank_budget, fm)
             out[thin], row_lens[thin], uniq[thin] = o2, r2, u2
             thin = thin[u2 < thresh]
     return out, SearchStats(row_lens, uniq)
 
 
 def _search_numpy_pass(index: IVFIndex, Q: np.ndarray, data: np.ndarray,
-                       top_t: int, final_k: int, rerank_budget: int,
+                       router, top_t: int, final_k: int, rerank_budget: int,
                        fm: Optional[np.ndarray]):
     """One fixed-top_t pass of the host engine; returns (out, points_read,
     unique_candidates) so the escalation driver can splice per-query rows."""
     nq = Q.shape[0]
-    C = index.centroids
-    scores_c = Q @ C.T                                   # (nq, c)
-    top_parts = np.argpartition(-scores_c, top_t - 1, axis=1)[:, :top_t]
-    # order the selected partitions by score (stable probe order)
-    row = np.arange(nq)[:, None]
-    ordsel = np.argsort(-scores_c[row, top_parts], axis=1)
-    top_parts = top_parts[row, ordsel]
+    # probe stage: router picks the partitions (score-descending) and
+    # reports their coarse scores — the flat router reproduces the old
+    # inline argpartition head bitwise
+    psc, top_parts = router.route_numpy(Q, top_t)
 
     use_pq = index.codes is not None and rerank_budget > 0
 
-    cand_rows, qidx, seg_part, row_lens = _ragged_gather(index.starts,
-                                                         top_parts)
+    cand_rows, qidx, seg_score, row_lens = _ragged_gather(index.starts,
+                                                          top_parts, psc)
     cand_ids = index.point_ids[cand_rows].astype(np.int64)
     if fm is not None:
         # subset masking at the gather stage: filtered candidates never
         # reach scoring, dedup, or the rerank budget
         keep = fm[cand_ids]
         cand_rows, qidx = cand_rows[keep], qidx[keep]
-        seg_part, cand_ids = seg_part[keep], cand_ids[keep]
+        seg_score, cand_ids = seg_score[keep], cand_ids[keep]
     # composite (query, id) key: one dedup pass for the whole batch
     key = qidx * np.int64(index.n_points) + cand_ids
 
@@ -154,7 +174,7 @@ def _search_numpy_pass(index: IVFIndex, Q: np.ndarray, data: np.ndarray,
         m = codes.shape[1]
         approx = luts[qidx[:, None], np.arange(m)[None, :],
                       codes].sum(axis=1)
-        approx = approx + scores_c[qidx, seg_part]        # + <q, centroid>
+        approx = approx + seg_score                       # + <q, centroid>
         # dedup: keep best approx score per (query, id)
         order = np.lexsort((-approx, key))
         key_s = key[order]
@@ -194,6 +214,9 @@ class PackedIVF(NamedTuple):
                  tail when m is odd), directly indexable into the merged
                  per-query LUT — halves the gather count of CPU scoring
     sizes:       (c,) int32
+    router:      optional probe-stage Router (core/router.py) attached at
+                 pack time; None → flat probe over `centroids` (the
+                 historical trace, bitwise)
     """
     centroids: jax.Array
     part_ids: jax.Array
@@ -202,6 +225,7 @@ class PackedIVF(NamedTuple):
     sizes: jax.Array
     pq: Optional[PQCodebook]
     rerank: jax.Array           # (n, d) f32
+    router: Optional[object] = None
 
 
 def _paired_codes(codes: np.ndarray, n_centers: int = 16) -> np.ndarray:
@@ -268,13 +292,15 @@ def pack_ivf(index: IVFIndex, pmax: Optional[int] = None,
     if data is None:
         from repro.quant.int8 import int8_dequantize
         data = np.asarray(int8_dequantize(index.rerank_int8))
+    rt = index.router
     return PackedIVF(
         jnp.asarray(index.centroids), jnp.asarray(ids),
         jnp.asarray(codes) if codes is not None else None,
         (jnp.asarray(_paired_codes(codes))
          if codes is not None and pair_codes else None),
         jnp.asarray(np.minimum(sizes, pmax).astype(np.int32)),
-        index.pq, jnp.asarray(data))
+        index.pq, jnp.asarray(data),
+        rt.device() if rt is not None else None)
 
 
 def window_pq_scores(luts, codes):
@@ -344,12 +370,19 @@ def _pad_topk(ids, vals, k: int):
             jnp.pad(vals, pads, constant_values=-jnp.inf))
 
 
-def _search_pass(packed: PackedIVF, Q, top_t: int, final_k: int,
+def _search_pass(packed: PackedIVF, Q, router, top_t: int, final_k: int,
                  rerank_budget: int, multiplicity: int = 2, filter=None):
     """One fixed-top_t candidate-local pass.
 
-    All per-query work is O(top_t·pmax): centroid scoring is one batched
-    GEMM, candidate gather/scoring/dedup operate on the (nq, t·pmax) window.
+    All per-query work is O(top_t·pmax): the probe stage is one router
+    call (flat: one batched GEMM + top-t, bitwise the historical trace;
+    tree: the fused two-level kernel), candidate gather/scoring/dedup
+    operate on the (nq, t·pmax) window. A router may return fewer than
+    top_t columns (tree with fewer reachable children); every downstream
+    width derives from the probe output, and starved slots arrive as
+    partition 0 at -inf coarse score per the router contract — the PQ
+    path masks them via the -inf offset, the exact path at worst rescans
+    partition 0's window (duplicates dedup away).
 
     `filter` is an index-side (n,) uint8 bitmap gathered PER WINDOW (the
     (n,) array is an input, never a per-query intermediate — the §3.6
@@ -362,8 +395,7 @@ def _search_pass(packed: PackedIVF, Q, top_t: int, final_k: int,
     capped at the stage budget — the escalation signal, matching the numpy
     engine's unique-candidate count.
     """
-    scores_c = Q @ packed.centroids.T                  # (nq, c) one GEMM
-    psc, parts = jax.lax.top_k(scores_c, top_t)        # (nq, t)
+    psc, parts = router.route(Q, top_t)                # (nq, t) probe stage
     ids = packed.part_ids[parts]                       # (nq, t, pmax)
     nq, t, pmax = ids.shape
     ids = ids.reshape(nq, t * pmax)
@@ -415,25 +447,32 @@ def _search_pass(packed: PackedIVF, Q, top_t: int, final_k: int,
 
 def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
                   rerank_budget: int, multiplicity: int = 2, filter=None,
-                  escalate: bool = False):
+                  escalate: bool = False, router=None):
     """Search body shared by search_jit / search_jit_batched: one
     `_search_pass`, plus — on the filtered path only — a SECOND fixed pass
-    at doubled top_t whose rows are selected per-query where the first
+    one router-escalation step up (flat: doubled top_t; tree: doubled
+    top_t AND t_route) whose rows are selected per-query where the first
     pass's surviving window was thinner than the rerank budget (the jit
     engine's shape-static analogue of the numpy engine's host-driven
     escalation loop). Unfiltered traces are byte-for-byte the single pass.
     """
-    c = packed.centroids.shape[0]
-    top_t = min(top_t, c)                  # lax.top_k width ∈ [0, c]
-    ids1, vals1, surv1 = _search_pass(packed, Q, top_t, final_k,
+    if router is None:
+        router = packed.router if packed.router is not None \
+            else FlatRouter(packed.centroids)
+    check_query_dim(Q, packed.centroids.shape[1])
+    top_t = router.clamp(top_t)            # lax.top_k width ∈ [0, c]
+    ids1, vals1, surv1 = _search_pass(packed, Q, router, top_t, final_k,
                                       rerank_budget, multiplicity, filter)
-    if filter is None or not escalate or top_t >= c:
+    if filter is None or not escalate or not router.can_escalate(top_t):
         return ids1, vals1
     thresh = rerank_budget if packed.part_codes is not None else final_k
-    ids2, vals2, _ = _search_pass(packed, Q, min(2 * top_t, c), final_k,
+    r2, t2 = router.escalated(top_t)
+    ids2, vals2, _ = _search_pass(packed, Q, r2, t2, final_k,
                                   rerank_budget, multiplicity, filter)
-    # the doubled probe set is a superset (top-2t ⊇ top-t of the same
-    # centroid scores), so taking pass-2 rows never loses candidates
+    # the escalated probe set is a superset for the flat router (top-2t ⊇
+    # top-t of the same centroid scores) and reaches strictly more
+    # children for the tree router, so taking pass-2 rows never loses
+    # candidates
     need = (surv1 < thresh)[:, None]
     return jnp.where(need, ids2, ids1), jnp.where(need, vals2, vals1)
 
@@ -443,22 +482,26 @@ def _search_block(packed: PackedIVF, Q, top_t: int, final_k: int,
                                               "escalate"))
 def search_jit(packed: PackedIVF, Q, top_t: int, final_k: int,
                rerank_budget: int = 256, multiplicity: int = 2,
-               filter=None, escalate: bool = True):
+               filter=None, escalate: bool = True, router=None):
     """Fully-jit batched search. Returns (ids, scores) of shape (nq, final_k).
 
-    Pipeline: batched centroid MIPS top-t → gather per-query candidate
-    windows → PQ LUT scoring (+ centroid offset; Pallas one-hot MXU kernel
-    on TPU) → sort-based dedup-by-max over the window → top rerank_budget →
-    exact rerank → top final_k. No intermediate scales with n.
+    Pipeline: router probe top-t (flat: batched centroid MIPS; tree: fused
+    two-level kernel) → gather per-query candidate windows → PQ LUT
+    scoring (+ coarse offset; Pallas one-hot MXU kernel on TPU) →
+    sort-based dedup-by-max over the window → top rerank_budget → exact
+    rerank → top final_k. No intermediate scales with n.
 
     filter: optional (n,) uint8 device bitmap over point ids (0 = drop);
     gathered per candidate window, never expanded per query. With
-    `escalate` a second fixed doubled-top_t pass backstops thin surviving
-    windows (selectivity escalation, DESIGN.md §3.9). Passing filter=None
-    traces exactly the unfiltered PR 4 pipeline.
+    `escalate` a second fixed router-escalated pass backstops thin
+    surviving windows (selectivity escalation, DESIGN.md §3.9). Passing
+    filter=None traces exactly the unfiltered PR 4 pipeline.
+
+    router: probe-stage Router pytree (core/router.py); default is the
+    router packed on the index, else the flat probe (historical trace).
     """
     return _search_block(packed, Q, top_t, final_k, rerank_budget,
-                         multiplicity, filter, escalate)
+                         multiplicity, filter, escalate, router)
 
 
 def bq_bucket(nq: int, bq: int) -> int:
@@ -488,13 +531,14 @@ def pad_queries(Q: np.ndarray, bq_cap: int):
 def search_jit_batched(packed: PackedIVF, Q, top_t: int, final_k: int,
                        rerank_budget: int = 256, bq: int = 128,
                        multiplicity: int = 2, filter=None,
-                       escalate: bool = True):
+                       escalate: bool = True, router=None):
     """`search_jit` streamed over bq-query tiles via lax.map.
 
     Live buffers are O(bq·top_t·pmax) regardless of nq — the driver for
     large offline batches and the serving engine's bulk path, where a flat
-    vmap over nq would blow VMEM/HBM. `filter`/`escalate` as in search_jit
-    (the bitmap is closed over, shared across tiles).
+    vmap over nq would blow VMEM/HBM. `filter`/`escalate`/`router` as in
+    search_jit (bitmap and router tables are closed over, shared across
+    tiles).
     """
     nq, d = Q.shape
     pad = (-nq) % bq
@@ -502,6 +546,7 @@ def search_jit_batched(packed: PackedIVF, Q, top_t: int, final_k: int,
     tiles = Qp.reshape(-1, bq, d)
     ids, vals = jax.lax.map(
         lambda qb: _search_block(packed, qb, top_t, final_k, rerank_budget,
-                                 multiplicity, filter, escalate), tiles)
+                                 multiplicity, filter, escalate, router),
+        tiles)
     k = ids.shape[-1]
     return ids.reshape(-1, k)[:nq], vals.reshape(-1, k)[:nq]

@@ -82,11 +82,18 @@ class AnnEngine:
     @classmethod
     def build(cls, key, X, n_partitions: int, *, spill_mode: str = "soar",
               lam: float = 1.0, pq_subspaces: int = 0, top_t: int = 8,
-              rerank_budget: int = 256, bq: int = 128, **build_kw):
-        """Sharded build (core/build.py) → serving engine."""
+              rerank_budget: int = 256, bq: int = 128, router=None,
+              router_kw=None, **build_kw):
+        """Sharded build (core/build.py) → serving engine.
+
+        router: probe-stage router spec plumbed to the build ("tree"
+        trains a TreeRouter over the centroids and every search then
+        probes through it; None keeps the flat probe — DESIGN.md §3.10).
+        """
         from repro.core.mutable import MutableIVF
         idx = MutableIVF.build(key, X, n_partitions, spill_mode=spill_mode,
-                               lam=lam, pq_subspaces=pq_subspaces, **build_kw)
+                               lam=lam, pq_subspaces=pq_subspaces,
+                               router=router, router_kw=router_kw, **build_kw)
         return cls(idx, top_t=top_t, rerank_budget=rerank_budget, bq=bq)
 
     @property
@@ -115,13 +122,15 @@ class AnnEngine:
         second probe pass. Unfiltered serving with no soft tombstones
         stays on the exact PR 4 trace.
         """
+        from repro.core.router import clamp_top_t
         from repro.core.search import pad_queries, search_jit_batched
         filt, escalate = self.index.serving_filter(
             mask=filter_mask, ids=filter_ids, escalate=escalate)
         Qp, nq, bq = pad_queries(Q, self.bq)
         ids, vals = search_jit_batched(
             self.index.pack(), jnp.asarray(Qp),
-            top_t=min(top_t or self.top_t, self.index.centroids.shape[0]),
+            top_t=clamp_top_t(top_t or self.top_t,
+                              self.index.centroids.shape[0]),
             final_k=k, rerank_budget=max(self.rerank_budget, k),
             bq=bq, multiplicity=1 + max(self.index.n_spills, 1),
             filter=filt, escalate=escalate)

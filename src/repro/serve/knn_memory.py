@@ -68,11 +68,16 @@ class KNNMemory:
     def build(cls, keys: np.ndarray, values: np.ndarray,
               n_partitions: Optional[int] = None, lam: float = 1.0,
               spill_mode: str = "soar", seed: int = 0,
-              engine: str = "numpy", segment: int = 0):
+              engine: str = "numpy", segment: int = 0,
+              router=None, router_kw=None):
+        """router: probe-stage router spec (core/router.py) — "tree"
+        trains a two-level centroid router at build; every retrieve on
+        both engines then probes through it (the snapshots carry it)."""
         n = keys.shape[0]
         c = n_partitions or max(4, n // 256)
         idx = build_ivf(jax.random.PRNGKey(seed), keys, c,
-                        spill_mode=spill_mode, lam=lam, train_iters=6)
+                        spill_mode=spill_mode, lam=lam, train_iters=6,
+                        router=router, router_kw=router_kw)
         return cls(MutableIVF.from_index(idx),
                    np.array(values, np.float32), engine=engine,
                    segments=np.full(n, segment, np.int32))

@@ -193,3 +193,55 @@ def test_elastic_checkpoint_remesh():
 
 def test_spmd_train_step_matches_single_device():
     _run(SCRIPT_TRAIN_SPMD)
+
+
+SCRIPT_ANN_ROUTER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.build import build_ivf_sharded
+from repro.core.distributed import (make_distributed_search,
+                                    make_distributed_search_pq,
+                                    sharded_from_indexes,
+                                    sharded_from_indexes_pq,
+                                    stack_tree_routers)
+from repro.launch.mesh import set_mesh
+from repro.core import true_neighbors
+from repro.data.vectors import make_manifold
+
+# each shard builds its own index AND its own two-level router (like its
+# own codebook); the with_router=True search paths take the stacked tables
+# as a trailing argument and probe through them shard-locally
+ds = make_manifold(jax.random.PRNGKey(0), n=8_000, d=32, nq=32, intrinsic_dim=8)
+tn = true_neighbors(ds.X, ds.Q, k=10)
+nl = 1_000
+idxs = [build_ivf_sharded(jax.random.fold_in(jax.random.PRNGKey(1), s),
+                          ds.X[s * nl:(s + 1) * nl], 16, spill_mode="soar",
+                          train_iters=4, pq_subspaces=8, router="tree",
+                          router_kw=dict(n_super=4, t_route=3))
+        for s in range(8)]
+srt = stack_tree_routers([i.router for i in idxs])
+mesh = jax.make_mesh((8,), ("data",))
+search = make_distributed_search(mesh, ("data",), top_t=8, final_k=10,
+                                 with_router=True, t_route=3)
+with set_mesh(mesh):
+    ids, _ = jax.jit(search)(sharded_from_indexes(idxs), jnp.asarray(ds.Q), srt)
+ids = np.asarray(ids)
+rec = (ids[:, :, None] == tn[:, None, :]).any(-1).mean()
+assert rec > 0.70, f"tree-routed distributed recall {rec}"
+assert ids.max() < 8_000
+searchpq = make_distributed_search_pq(mesh, ("data",), top_t=8, final_k=10,
+                                      rerank_k=128, q_chunk=32,
+                                      with_router=True, t_route=3)
+with set_mesh(mesh):
+    idsp, _ = jax.jit(searchpq)(sharded_from_indexes_pq(idxs),
+                                jnp.asarray(ds.Q), srt)
+idsp = np.asarray(idsp)
+recp = (idsp[:, :, None] == tn[:, None, :]).any(-1).mean()
+assert recp > 0.65, f"tree-routed distributed PQ recall {recp}"
+print("OK recall", rec, recp)
+"""
+
+
+def test_distributed_ann_search_tree_routed():
+    _run(SCRIPT_ANN_ROUTER)

@@ -1,0 +1,320 @@
+"""Router abstraction tests (ISSUE 6): the probe stage as a first-class
+Router (core/router.py, DESIGN.md §3.10).
+
+Pins, in order of importance:
+
+1. `FlatRouter` probe sets are BITWISE-identical to the pre-refactor
+   inline GEMM + top-t on both engines (property-tested against inline
+   reference implementations copied from the pre-refactor code), and
+   end-to-end search with an explicit FlatRouter is slot-exact equal to
+   the default path, filtered and unfiltered — the refactor changed zero
+   behavior.
+2. `TreeRouter` at `t_route = n_super` degrades to exact flat routing
+   (same probe sets, modulo ties at the top-t boundary).
+3. The `top_t` clamp lives in ONE place (`clamp_top_t`) and every entry
+   point agrees: an absurdly large top_t returns exactly the top_t=c
+   result through search_numpy, search_jit, search_jit_batched,
+   AnnEngine.search, and KNNMemory.retrieve.
+4. Dimension mismatches raise a clear ValueError on both engines.
+5. Routers ride the index through build → pack → mutation snapshots →
+   rebuild (frozen-router contract), with emptied partitions pruned from
+   the serving view.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import build_ivf, pack_ivf, search_numpy, search_jit
+from repro.core.mutable import MutableIVF
+from repro.core.router import (FlatRouter, TreeRouter, as_router,
+                               clamp_top_t, train_tree_router)
+from repro.core.search import search_jit_batched
+from repro.data.vectors import make_manifold
+
+N, D, NQ, C = 6_000, 32, 29, 48
+TOP_T, FINAL_K = 10, 10
+
+
+@pytest.fixture(scope="module")
+def built():
+    ds = make_manifold(jax.random.PRNGKey(0), n=N, d=D, nq=NQ,
+                       intrinsic_dim=8)
+    idx = build_ivf(jax.random.PRNGKey(1), ds.X, C, spill_mode="soar",
+                    pq_subspaces=8, train_iters=4)
+    return ds, idx, pack_ivf(idx)
+
+
+@pytest.fixture(scope="module")
+def tree(built):
+    _, idx, _ = built
+    return train_tree_router(jax.random.PRNGKey(2), idx.centroids,
+                             n_super=8, t_route=3)
+
+
+# ----------------------------------------------------------- probe bitwise
+def _inline_probe_numpy(Q, C_, top_t):
+    """The pre-refactor `_search_numpy_pass` probe head, verbatim."""
+    scores_c = Q @ C_.T
+    top_parts = np.argpartition(-scores_c, top_t - 1, axis=1)[:, :top_t]
+    row = np.arange(Q.shape[0])[:, None]
+    ordsel = np.argsort(-scores_c[row, top_parts], axis=1)
+    top_parts = top_parts[row, ordsel]
+    return scores_c[row, top_parts], top_parts
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nq=st.integers(1, 6),
+       c=st.integers(2, 40), d=st.integers(2, 24), t=st.integers(1, 40))
+def test_flat_route_numpy_bitwise(seed, nq, c, d, t):
+    rng = np.random.default_rng(seed)
+    Q = rng.standard_normal((nq, d)).astype(np.float32)
+    C_ = rng.standard_normal((c, d)).astype(np.float32)
+    t = clamp_top_t(t, c) or 1
+    want_s, want_p = _inline_probe_numpy(Q, C_, t)
+    got_s, got_p = FlatRouter(C_).route_numpy(Q, t)
+    assert np.array_equal(want_p, got_p)
+    assert np.array_equal(want_s, got_s)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nq=st.integers(1, 5),
+       c=st.integers(2, 32), d=st.integers(2, 16), t=st.integers(1, 32))
+def test_flat_route_jit_bitwise(seed, nq, c, d, t):
+    rng = np.random.default_rng(seed)
+    Q = jnp.asarray(rng.standard_normal((nq, d)).astype(np.float32))
+    C_ = jnp.asarray(rng.standard_normal((c, d)).astype(np.float32))
+    t = clamp_top_t(t, c) or 1
+    want_s, want_p = jax.lax.top_k(Q @ C_.T, t)   # the pre-refactor probe
+    got_s, got_p = FlatRouter(C_).route(Q, t)
+    assert np.array_equal(np.asarray(want_p), np.asarray(got_p))
+    assert np.array_equal(np.asarray(want_s), np.asarray(got_s))
+
+
+@pytest.mark.parametrize("filtered", [False, True])
+def test_explicit_flat_router_end_to_end_identity(built, filtered):
+    """search with router=FlatRouter(centroids) must be slot-exact equal
+    to the default router=None path on BOTH engines (the refactor's
+    no-behavior-change contract), filtered and unfiltered."""
+    ds, idx, packed = built
+    fm = None
+    if filtered:
+        fm = np.zeros(N, bool)
+        fm[::3] = True
+    flat = FlatRouter(idx.centroids)
+    a, sa = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                         rerank_budget=128, filter_mask=fm)
+    b, sb = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                         rerank_budget=128, filter_mask=fm, router=flat)
+    assert np.array_equal(a, b)
+    assert np.array_equal(sa.unique_candidates, sb.unique_candidates)
+    fdev = jnp.asarray(fm.astype(np.uint8)) if filtered else None
+    ja, va = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                        final_k=FINAL_K, rerank_budget=128, filter=fdev)
+    jb, vb = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                        final_k=FINAL_K, rerank_budget=128, filter=fdev,
+                        router=FlatRouter(packed.centroids))
+    assert np.array_equal(np.asarray(ja), np.asarray(jb))
+    assert np.array_equal(np.asarray(va), np.asarray(vb))
+
+
+# ------------------------------------------------------- tree degradation
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), c=st.integers(6, 48),
+       d=st.integers(2, 12), t=st.integers(1, 16))
+def test_tree_at_full_t_route_degrades_to_flat(seed, c, d, t):
+    """At t_route = n_super every child is scored, so the tree probe SET
+    equals the flat probe set. Integer-valued data keeps both score paths
+    exact (any f32 summation order gives the identical value), and rows
+    with a score tie at the top-t boundary are skipped — the set is only
+    well-defined with a strict gap."""
+    rng = np.random.default_rng(seed)
+    C_ = rng.integers(-8, 8, (c, d)).astype(np.float32)
+    Q = rng.integers(-8, 8, (5, d)).astype(np.float32)
+    t = clamp_top_t(t, c) or 1
+    rt = train_tree_router(jax.random.PRNGKey(seed % 997), C_,
+                           n_super=max(2, int(np.sqrt(c))), iters=3)
+    rt = rt.with_t_route(rt.n_super)
+    sc = Q @ C_.T
+    srt = -np.sort(-sc, axis=1)
+    gap = srt[:, t - 1] > srt[:, t] if t < c else np.ones(5, bool)
+    _, fp = FlatRouter(C_).route_numpy(Q, t)
+    _, tp = rt.route_numpy(Q, t)
+    _, jp = rt.route(jnp.asarray(Q), t)
+    jp = np.asarray(jp)
+    for g, a, b, j in zip(gap, fp, tp, jp):
+        if g:
+            assert set(a.tolist()) == set(b.tolist())
+            assert set(a.tolist()) == set(j.tolist())
+
+
+# ----------------------------------------------------------- clamp policy
+def test_clamp_top_t_is_the_single_source():
+    assert clamp_top_t(100, 32) == 32
+    assert clamp_top_t(7, 32) == 7
+    assert clamp_top_t(-3, 32) == 0
+
+
+def test_all_entry_points_agree_on_clamp(built):
+    """A top_t far beyond n_partitions must clamp identically (to the
+    top_t=c result) through EVERY entry point — the clamp was previously
+    duplicated with drift across search.py and AnnEngine."""
+    ds, idx, packed = built
+    huge = 10_000
+    want, _ = search_numpy(idx, ds.Q, top_t=C, final_k=FINAL_K,
+                           rerank_budget=128)
+    got_np, _ = search_numpy(idx, ds.Q, top_t=huge, final_k=FINAL_K,
+                             rerank_budget=128)
+    assert np.array_equal(want, got_np)
+    jw, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=C, final_k=FINAL_K,
+                       rerank_budget=128)
+    jg, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=huge,
+                       final_k=FINAL_K, rerank_budget=128)
+    assert np.array_equal(np.asarray(jw), np.asarray(jg))
+    bg, _ = search_jit_batched(packed, jnp.asarray(ds.Q), top_t=huge,
+                               final_k=FINAL_K, rerank_budget=128, bq=8)
+    assert np.array_equal(np.asarray(jw), np.asarray(bg))
+    from repro.serve.engine import AnnEngine
+    eng = AnnEngine(MutableIVF.from_index(idx), rerank_budget=128)
+    ew, _ = eng.search(ds.Q, k=FINAL_K, top_t=C)
+    eg, _ = eng.search(ds.Q, k=FINAL_K, top_t=huge)
+    assert np.array_equal(ew, eg)
+    from repro.serve.knn_memory import KNNMemory
+    mem = KNNMemory(MutableIVF.from_index(idx), ds.X.copy())
+    mw, _, _ = mem.retrieve(ds.Q, k=FINAL_K, top_t=C)
+    mg, _, _ = mem.retrieve(ds.Q, k=FINAL_K, top_t=huge)
+    assert np.array_equal(mw, mg)
+
+
+# ------------------------------------------------------------- dim errors
+def test_query_dim_mismatch_raises_numpy(built):
+    ds, idx, _ = built
+    bad = np.zeros((3, D + 1), np.float32)
+    with pytest.raises(ValueError, match="feature dim"):
+        search_numpy(idx, bad, top_t=4, final_k=5)
+
+
+def test_query_dim_mismatch_raises_jit(built):
+    _, _, packed = built
+    bad = jnp.zeros((3, D - 1), jnp.float32)
+    with pytest.raises(ValueError, match="feature dim"):
+        search_jit(packed, bad, top_t=4, final_k=5)
+
+
+# ----------------------------------------------------- tree end-to-end
+def test_tree_router_end_to_end_recall(built, tree):
+    """Tree-routed search on both engines stays within a recall stone's
+    throw of flat at the same top_t while probing a fraction of the
+    centroids (the whole point of the router)."""
+    ds, idx, packed = built
+    gt = np.argsort(-(ds.Q @ ds.X.T), axis=1)[:, :FINAL_K]
+
+    def recall(ids):
+        ids = np.asarray(ids)
+        return np.mean([len(set(a.tolist()) & set(b.tolist())) / FINAL_K
+                        for a, b in zip(ids, gt)])
+
+    flat_ids, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                               rerank_budget=128)
+    tn, _ = search_numpy(idx, ds.Q, top_t=TOP_T, final_k=FINAL_K,
+                         rerank_budget=128, router=tree)
+    tj, _ = search_jit(packed, jnp.asarray(ds.Q), top_t=TOP_T,
+                       final_k=FINAL_K, rerank_budget=128,
+                       router=tree.device())
+    rf, rn, rj = recall(flat_ids), recall(tn), recall(tj)
+    assert rn >= rf - 0.12, (rn, rf)
+    assert rj >= rf - 0.12, (rj, rf)
+    assert tree.probe_flops(TOP_T) < FlatRouter(idx.centroids).probe_flops(
+        TOP_T), "tree probe must be cheaper than flat at this config"
+
+
+def test_tree_escalation_through_router(built, tree):
+    """Escalation doubles BOTH the cut (top_t) and the reachable set
+    (t_route); a selective filter served through a tree router must
+    escalate to valid, subset-respecting results."""
+    r2, t2 = tree.escalated(4)
+    assert t2 == 8
+    assert r2.t_route == min(2 * tree.eff_t_route, tree.n_super)
+    assert tree.can_escalate(tree.n_partitions) is True  # t_route headroom
+    full = tree.with_t_route(tree.n_super)
+    assert full.can_escalate(full.n_partitions) is False
+    ds, idx, _ = built
+    fm = np.zeros(N, bool)
+    fm[::11] = True
+    ids, stats = search_numpy(idx, ds.Q, top_t=2, final_k=FINAL_K,
+                              rerank_budget=64, filter_mask=fm, router=tree)
+    got = ids[ids >= 0]
+    assert got.size and fm[got].all()
+    assert stats.unique_candidates.min() >= min(64, int(fm.sum()))
+
+
+# ------------------------------------------------- lifecycle / serialization
+def test_router_rides_build_pack_and_snapshots():
+    ds = make_manifold(jax.random.PRNGKey(3), n=2_000, d=16, nq=5,
+                       intrinsic_dim=4)
+    idx = build_ivf(jax.random.PRNGKey(4), ds.X, 16, spill_mode="soar",
+                    train_iters=3, router="tree",
+                    router_kw=dict(n_super=4, t_route=2))
+    assert isinstance(idx.router, TreeRouter)
+    assert pack_ivf(idx).router is not None
+    m = MutableIVF.from_index(idx)
+    assert m.router is idx.router
+    assert isinstance(m.pack().router, TreeRouter)
+    assert isinstance(m.to_ivf_index().router, TreeRouter)
+    # frozen-router rebuild: the instance passes through untouched
+    rb = m.rebuild_reference(jax.random.PRNGKey(5))
+    assert rb.router is m.router
+    # both engines serve through the packed router with no explicit arg
+    jids, _ = search_jit(m.pack(), jnp.asarray(ds.Q), top_t=4, final_k=5,
+                         rerank_budget=0)
+    nids, _ = search_numpy(m.to_ivf_index(), ds.Q, top_t=4, final_k=5)
+    assert (np.asarray(jids) >= 0).any() and (nids >= 0).any()
+
+
+def test_mutable_prunes_emptied_partitions_from_serving_router():
+    ds = make_manifold(jax.random.PRNGKey(6), n=1_500, d=16, nq=3,
+                       intrinsic_dim=4)
+    idx = build_ivf(jax.random.PRNGKey(7), ds.X, 12, spill_mode="none",
+                    train_iters=3, router="tree",
+                    router_kw=dict(n_super=3, t_route=3))
+    m = MutableIVF.from_index(idx)
+    p = int(np.argmax(np.diff(idx.starts)))       # a populated partition
+    victims = idx.point_ids[idx.starts[p]:idx.starts[p + 1]]
+    m.remove(victims, hard=True)
+    rt = m.pack().router
+    assert p not in np.asarray(rt.children), \
+        "emptied partition must prune from the serving router view"
+    # repopulating the partition un-prunes it on the next snapshot
+    centroid = idx.centroids[p]
+    m.add(np.tile(centroid, (4, 1)))
+    rt2 = m.pack().router
+    assert p in np.asarray(rt2.children)
+    # the frozen trained tables were never touched
+    assert p in np.asarray(m.router.children)
+
+
+# ------------------------------------------------------------- spec resolver
+def test_as_router_specs(built):
+    _, idx, _ = built
+    assert as_router(None, idx.centroids) is None
+    assert isinstance(as_router("flat", idx.centroids), FlatRouter)
+    rt = as_router("tree", idx.centroids, key=jax.random.PRNGKey(0),
+                   n_super=4)
+    assert isinstance(rt, TreeRouter) and rt.n_partitions == C
+    assert as_router(rt, idx.centroids) is rt
+    with pytest.raises(ValueError, match="unknown router"):
+        as_router("graph", idx.centroids)
+
+
+def test_knn_memory_with_tree_router(built):
+    ds, _, _ = built
+    from repro.serve.knn_memory import KNNMemory
+    mem = KNNMemory.build(ds.X[:2_000], ds.X[:2_000], n_partitions=16,
+                          router="tree", router_kw=dict(n_super=4,
+                                                        t_route=2))
+    ids, K, V = mem.retrieve(ds.Q, k=8, top_t=4)
+    assert ids.shape == (NQ, 8) and (ids >= 0).any()
+    mem.engine = "jit"
+    jids, _, _ = mem.retrieve(ds.Q, k=8, top_t=4)
+    assert jids.shape == (NQ, 8) and (jids >= 0).any()
