@@ -189,6 +189,38 @@ def run(n: int, c: int, train_iters: int, top_t: int, budget: int,
     emit(f"remove_compact_{label}", t_rm.us,
          f"{victims.size} removals + compaction")
 
+    # ---- durability: snapshot save throughput + reopen-to-first-query ----
+    import os
+    import shutil
+    import tempfile
+
+    from repro.ckpt.index_store import load_snapshot, save_snapshot
+    snap_dir = tempfile.mkdtemp(prefix="bench_snap_")
+    try:
+        sp = os.path.join(snap_dir, "index")
+        best_save = float("inf")
+        for _ in range(3):
+            with Timer() as t_sv:
+                save_snapshot(sp, mut)
+            best_save = min(best_save, t_sv.us)
+        nbytes = sum(os.path.getsize(os.path.join(sp, f))
+                     for f in os.listdir(sp))
+        emit(f"snapshot_save_{label}", best_save,
+             f"{nbytes / 1e6:.1f} MB atomic snapshot, "
+             f"{nbytes / best_save:.0f} MB/s (fsync + checksum included)")
+        qf = jnp.asarray(Q[:32])
+        jax.block_until_ready(search_jit(mut.pack(), qf, **kw))  # warm jit
+        best_ro = float("inf")
+        for _ in range(3):
+            with Timer() as t_ro:
+                idx2, _ = load_snapshot(sp)
+                jax.block_until_ready(search_jit(idx2.pack(), qf, **kw))
+            best_ro = min(best_ro, t_ro.us)
+        emit(f"snapshot_reopen_{label}", best_ro,
+             "integrity-checked load + pack + first query (warm jit)")
+    finally:
+        shutil.rmtree(snap_dir)
+
     # ---- recall after mutation vs full rebuild on the survivors ----
     live = np.flatnonzero(mut.alive[:mut.n_total])
     id_map = np.full(mut.n_total, -1, np.int64)

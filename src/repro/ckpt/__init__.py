@@ -1,0 +1,10 @@
+"""Durable state: train-loop checkpoints (checkpoint.py) and the index
+lifecycle substrate (index_store.py snapshots + wal.py mutation log +
+faults.py crash injection) — DESIGN.md §3.11."""
+from repro.ckpt.index_store import (CorruptSnapshotError, load_shards,
+                                    load_snapshot, save_shards,
+                                    save_snapshot)
+from repro.ckpt.wal import MutationWAL
+
+__all__ = ["CorruptSnapshotError", "MutationWAL", "load_shards",
+           "load_snapshot", "save_shards", "save_snapshot"]

@@ -20,6 +20,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.ckpt.index_store import atomic_replace_dir, resolve_snapshot_dir
+
 
 def _leaf_names(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -50,14 +52,21 @@ def save(path: str, tree: Any, step: int = 0, extra: Optional[dict] = None):
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "names": names, "dtypes": dtypes,
                    "extra": extra or {}}, f)
-    if os.path.exists(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)
+        f.flush()
+        os.fsync(f.fileno())
+    # the old rmtree(path)-then-rename left a window with NO copy on disk
+    # (crash after the rmtree loses the only checkpoint); the rename-aside
+    # swap keeps a committed copy at every crash point, and restore()
+    # finishes an interrupted swap from <path>.old
+    atomic_replace_dir(tmp, path)
 
 
 def restore(path: str, template: Any, shardings: Any = None):
     """Rebuild `template`'s pytree from disk; optionally device_put with new
     shardings (elastic re-mesh)."""
+    path = resolve_snapshot_dir(path)
+    if not os.path.isdir(path):
+        raise FileNotFoundError(f"no checkpoint directory at {path}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     data = np.load(os.path.join(path, "leaves.npz"))
@@ -82,18 +91,24 @@ class CheckpointManager:
 
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
-        self.keep = keep
+        # retention must never delete the checkpoint that was just
+        # written — keep < 1 would do exactly that
+        self.keep = max(1, int(keep))
         os.makedirs(directory, exist_ok=True)
 
     def _path(self, step: int) -> str:
         return os.path.join(self.dir, f"ckpt_{step:08d}")
 
     def steps(self):
-        out = []
+        """Committed steps, sorted. Stray entries (foo/, ckpt_abc,
+        ckpt_N.tmp) are ignored; a checkpoint surviving only as
+        ckpt_N.old (crash mid-swap) counts — restore() finishes the
+        swap."""
+        out = set()
         for name in os.listdir(self.dir):
-            m = re.fullmatch(r"ckpt_(\d+)", name)
+            m = re.fullmatch(r"ckpt_(\d+)(\.old)?", name)
             if m:
-                out.append(int(m.group(1)))
+                out.add(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -103,11 +118,25 @@ class CheckpointManager:
     def save(self, step: int, tree, extra=None):
         save(self._path(step), tree, step=step, extra=extra)
         for old in self.steps()[:-self.keep]:
-            shutil.rmtree(self._path(old))
+            if old == step:      # an out-of-order save of an old step is
+                continue         # still the newest write — never drop it
+            for p in (self._path(old), self._path(old) + ".old"):
+                if os.path.isdir(p):
+                    shutil.rmtree(p)
 
     def restore(self, template, step: Optional[int] = None, shardings=None):
-        step = self.latest_step() if step is None else step
-        assert step is not None, "no checkpoint found"
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoints under {self.dir}")
+        elif step not in self.steps():
+            have = self.steps()
+            raise FileNotFoundError(
+                f"no checkpoint for step {step} under {self.dir} "
+                f"(have steps {have})" if have else
+                f"no checkpoint for step {step} under {self.dir} "
+                f"(directory is empty)")
         return restore(self._path(step), template, shardings)
 
     # -------- train-state convenience (params + optimizer + data cursor)

@@ -460,6 +460,26 @@ def sharded_from_indexes_pq(indexes) -> ShardedIVFPQ:
         jnp.asarray(np.array(bases, np.int32)))
 
 
+# ------------------------------------------------------------- durability
+def save_sharded(path: str, indexes, *, extra=None):
+    """Per-shard snapshot envelope (DESIGN.md §3.11): one integrity-
+    checked snapshot subdir per shard (IVFIndex or MutableIVF — full
+    mutation state survives) plus an envelope manifest, committed with a
+    single atomic directory swap. Keep the PER-SHARD indexes around for
+    saving rather than the stacked device arrays: the envelope restores
+    them, and `sharded_from_indexes(_pq)` restacks bitwise."""
+    from repro.ckpt.index_store import save_shards
+    save_shards(path, indexes, extra=extra)
+
+
+def load_sharded(path: str):
+    """→ (per-shard index objects, extra). Restack with
+    `sharded_from_indexes` / `sharded_from_indexes_pq`; any torn or
+    bit-flipped shard raises CorruptSnapshotError at load."""
+    from repro.ckpt.index_store import load_shards
+    return load_shards(path)
+
+
 def build_sharded_ivf_pq(key, X: np.ndarray, n_shards: int, n_partitions: int,
                          pq_subspaces: int, spill_mode: str = "soar",
                          lam: float = 1.0, train_iters: int = 8

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt.wal import REC_ADD, REC_COMPACT, REC_HARDEN, REC_REMOVE
 from repro.core.build import build_ivf_sharded, spill_plan
 from repro.core.ivf import IVFIndex, finalize_ivf
 from repro.core.search import PackedIVF, _paired_codes
@@ -101,6 +102,13 @@ class MutableIVF:
     # _serving_router)
     _router_dev: Optional[object] = field(default=None, repr=False)
     _router_key: Optional[bytes] = field(default=None, repr=False)
+    # durability (DESIGN.md §3.11): sequence number of the last mutation
+    # covered by this state — a snapshot stores it, and WAL replay skips
+    # records at or below it. _wal, when attached, gets one CRC-framed
+    # record per mutation BEFORE the mutation applies (write-ahead).
+    wal_seq: int = 0
+    _wal: Optional[object] = field(default=None, repr=False)
+    _replaying: bool = field(default=False, repr=False)
 
     # ------------------------------------------------------------ builders
     @classmethod
@@ -180,6 +188,61 @@ class MutableIVF:
             return
         self._dirty_parts[parts] = True
 
+    # ---------------------------------------------------------- durability
+    def attach_wal(self, wal, replay: bool = True) -> int:
+        """Attach a MutationWAL (ckpt/wal.py): every subsequent mutation
+        appends one record before applying. With `replay` (default), any
+        committed records in the log with seq > this state's `wal_seq`
+        are applied first — the open-after-crash path (snapshot + WAL →
+        the exact live state). Returns how many records were replayed."""
+        import os
+
+        from repro.ckpt.wal import read_records
+        n = 0
+        if replay and os.path.exists(wal.path):
+            for seq, rtype, meta, arrays in read_records(wal.path):
+                if self.replay_record(seq, rtype, meta, arrays):
+                    n += 1
+        self._wal = wal
+        return n
+
+    def replay_record(self, seq: int, rtype: int, meta: dict,
+                      arrays: dict) -> bool:
+        """Apply one WAL record if it postdates this state (seq >
+        wal_seq). Mutations replay through the SAME code paths that
+        logged them — determinism of those paths (frozen-codebook fused
+        assignment, stable sorts) is what makes recovery bitwise."""
+        from repro.ckpt.index_store import CorruptSnapshotError
+        if seq <= self.wal_seq:
+            return False               # already folded into the snapshot
+        self._replaying = True
+        try:
+            if rtype == REC_ADD:
+                self.add(arrays["x"])
+            elif rtype == REC_REMOVE:
+                self.remove(arrays["ids"], hard=bool(meta["hard"]))
+            elif rtype == REC_HARDEN:
+                self.harden_soft_deletes()
+            elif rtype == REC_COMPACT:
+                self._compact_impl()
+            else:
+                raise CorruptSnapshotError(
+                    f"unknown WAL record type {rtype} (seq {seq})")
+        finally:
+            self._replaying = False
+        self.wal_seq = seq
+        return True
+
+    def _log(self, rtype: int, meta: Optional[dict] = None,
+             arrays: Optional[dict] = None):
+        """Write-ahead: append the record (durably, per the WAL's fsync
+        policy) BEFORE the mutation applies. A crash after the append
+        recovers to the post-mutation state via replay; a crash during it
+        leaves a torn record that recovery drops — either way a committed
+        state, never a hybrid."""
+        if self._wal is not None and not self._replaying:
+            self.wal_seq = self._wal.append(rtype, meta, arrays)
+
     # ------------------------------------------------------------ mutation
     def add(self, X_new) -> np.ndarray:
         """Insert a batch of vectors; returns their (stable) point ids.
@@ -192,6 +255,7 @@ class MutableIVF:
         b = X_new.shape[0]
         if b == 0:
             return np.empty((0,), np.int32)
+        self._log(REC_ADD, arrays={"x": X_new})
         eff_lam, eff_spills = spill_plan(self.spill_mode, self.lam,
                                          self.n_spills)
         # right-size the streamed tile: a 64-row online insert must not pay
@@ -279,6 +343,7 @@ class MutableIVF:
         ids = ids[self.alive[ids]]
         if ids.size == 0:
             return 0
+        self._log(REC_REMOVE, {"hard": bool(hard)}, {"ids": ids})
         self._alive_epoch += 1
         if not hard:
             self.alive[ids] = False
@@ -301,7 +366,9 @@ class MutableIVF:
         self.assignments[ids] = -1
         self._mark_dirty(rows)
         if self.dead_fraction > self.compact_threshold:
-            self.compact()
+            # implied by the remove/harden record already logged — logging
+            # it again would double-compact on replay
+            self._compact_impl()
 
     def compact(self):
         """Shift live slots left within each partition, dropping tombstones.
@@ -309,6 +376,10 @@ class MutableIVF:
         One vectorized stable argsort per row; slot order (hence search
         tie-breaking) of survivors is preserved. Point ids do not change.
         """
+        self._log(REC_COMPACT)
+        self._compact_impl()
+
+    def _compact_impl(self):
         hole = self.part_ids < 0
         order = np.argsort(hole, axis=1, kind="stable")   # live slots first
         self.part_ids = np.take_along_axis(self.part_ids, order, axis=1)
@@ -324,6 +395,7 @@ class MutableIVF:
         ones (slots blanked to -1) in one batch — reclaims their probed-
         window slots once filter masking alone wastes too many. Returns
         how many were hardened; may trigger compaction."""
+        self._log(REC_HARDEN)
         dead = np.flatnonzero(~self.alive[:self.n_total]
                               & (self.assignments[:self.n_total, 0] >= 0))
         self.n_soft_deleted = 0

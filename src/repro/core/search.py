@@ -116,6 +116,9 @@ def search_numpy(index: IVFIndex, Q: np.ndarray, top_t: int,
     if router is None:
         router = index.router or FlatRouter(index.centroids)
     check_query_dim(Q, index.centroids.shape[1])
+    if Q.shape[0] == 0:                      # empty batch → empty results
+        z = np.zeros(0, np.int64)
+        return np.full((0, final_k), -1, np.int32), SearchStats(z, z)
     top_t = router.clamp(top_t)              # argpartition kth ∈ [0, c)
     fm = None
     if filter_mask is not None:
@@ -541,6 +544,9 @@ def search_jit_batched(packed: PackedIVF, Q, top_t: int, final_k: int,
     tiles).
     """
     nq, d = Q.shape
+    if nq == 0:          # static at trace time: empty batch, no tiles
+        return (jnp.zeros((0, final_k), jnp.int32),
+                jnp.zeros((0, final_k), jnp.float32))
     pad = (-nq) % bq
     Qp = jnp.pad(Q, ((0, pad), (0, 0))) if pad else Q
     tiles = Qp.reshape(-1, bq, d)

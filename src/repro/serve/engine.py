@@ -8,6 +8,7 @@ counterpart: add/remove/search against a live index (DESIGN.md §3.7).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -16,6 +17,47 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+
+
+def _positive_int(name: str, v) -> int:
+    """Serving-edge bounds check: k/top_t/rerank_budget/bq must be
+    positive integers — an explicit 0 (or a float, or a bool) is a caller
+    bug and gets a clear error instead of silently searching nothing or
+    falling back to a default."""
+    if isinstance(v, bool) or not isinstance(v, (int, np.integer)) or v < 1:
+        raise ValueError(f"{name} must be a positive integer, got {v!r}")
+    return int(v)
+
+
+def validate_queries(Q, d: int, *, sanitize: bool = False) -> np.ndarray:
+    """Query hygiene for serving entry points (DESIGN.md §3.11): returns
+    a (nq, d) float32 batch or raises a clear ValueError. Rejects
+    non-numeric dtypes and wrong rank; non-finite values (NaN/Inf —
+    including float64 magnitudes that overflow the float32 cast) raise
+    unless `sanitize`, which zeroes them. Without this, one NaN query
+    poisons its whole jit tile's scores with no error anywhere."""
+    Q = np.asarray(Q)
+    if (Q.dtype == object or not np.issubdtype(Q.dtype, np.number)
+            or np.issubdtype(Q.dtype, np.complexfloating)):
+        raise ValueError(
+            f"queries must be real-numeric, got dtype {Q.dtype}")
+    Q = np.atleast_2d(Q)
+    if Q.ndim != 2:
+        raise ValueError(
+            f"queries must be (nq, d) or (d,), got shape {tuple(Q.shape)}")
+    from repro.core.router import check_query_dim
+    check_query_dim(Q, d)
+    with np.errstate(over="ignore"):   # cast overflow → inf, caught below
+        Q = Q.astype(np.float32, copy=False)
+    if Q.size and not np.isfinite(Q).all():
+        if sanitize:
+            Q = np.nan_to_num(Q, nan=0.0, posinf=0.0, neginf=0.0)
+        else:
+            bad = int((~np.isfinite(Q)).sum())
+            raise ValueError(
+                f"queries contain {bad} non-finite value(s) (NaN/Inf); "
+                f"pass sanitize=True to zero them")
+    return Q
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -75,9 +117,9 @@ class AnnEngine:
     def __init__(self, index, *, top_t: int = 8, rerank_budget: int = 256,
                  bq: int = 128):
         self.index = index
-        self.top_t = top_t
-        self.rerank_budget = rerank_budget
-        self.bq = bq
+        self.top_t = _positive_int("top_t", top_t)
+        self.rerank_budget = _positive_int("rerank_budget", rerank_budget)
+        self.bq = _positive_int("bq", bq)
 
     @classmethod
     def build(cls, key, X, n_partitions: int, *, spill_mode: str = "soar",
@@ -110,8 +152,16 @@ class AnnEngine:
         return self.index.remove(ids, hard=hard)
 
     def search(self, Q, k: int = 10, top_t: Optional[int] = None,
-               filter_ids=None, filter_mask=None, escalate: bool = True):
+               filter_ids=None, filter_mask=None, escalate: bool = True,
+               sanitize: bool = False):
         """(nq, d) queries → (ids (nq, k) int32, scores (nq, k)).
+
+        The engine is the hardened serving edge (DESIGN.md §3.11): Q is
+        dtype/shape/finiteness-validated (`sanitize=True` zeroes NaN/Inf
+        instead of raising), k/top_t are bounds-checked — an explicit
+        top_t=0 raises rather than silently falling back to the default —
+        and an empty batch returns empty (0, k) results without touching
+        the jit pipeline.
 
         filter_ids / filter_mask restrict the search to a subset of live
         points (an explicit id allowlist and/or a bitmap over point ids);
@@ -124,14 +174,61 @@ class AnnEngine:
         """
         from repro.core.router import clamp_top_t
         from repro.core.search import pad_queries, search_jit_batched
+        k = _positive_int("k", k)
+        top_t = (self.top_t if top_t is None
+                 else _positive_int("top_t", top_t))
+        Q = validate_queries(Q, self.index.centroids.shape[1],
+                             sanitize=sanitize)
+        if Q.shape[0] == 0:
+            return np.empty((0, k), np.int32), np.empty((0, k), np.float32)
         filt, escalate = self.index.serving_filter(
             mask=filter_mask, ids=filter_ids, escalate=escalate)
         Qp, nq, bq = pad_queries(Q, self.bq)
         ids, vals = search_jit_batched(
             self.index.pack(), jnp.asarray(Qp),
-            top_t=clamp_top_t(top_t or self.top_t,
-                              self.index.centroids.shape[0]),
+            top_t=clamp_top_t(top_t, self.index.centroids.shape[0]),
             final_k=k, rerank_budget=max(self.rerank_budget, k),
             bq=bq, multiplicity=1 + max(self.index.n_spills, 1),
             filter=filt, escalate=escalate)
         return np.asarray(ids)[:nq], np.asarray(vals)[:nq]
+
+    # ---------------------------------------------------------- durability
+    def save(self, path: str):
+        """Atomic, versioned snapshot of the full serving state — index
+        (codebooks, router, partitions, tombstones, wal_seq) + engine
+        config — under `path` (DESIGN.md §3.11). If a WAL is attached,
+        the log is rotated afterwards: every record is covered by the
+        snapshot's wal_seq, and sequence numbers continue monotonically,
+        so a crash between snapshot commit and rotation is benign."""
+        from repro.ckpt.index_store import save_snapshot
+        os.makedirs(path, exist_ok=True)
+        save_snapshot(os.path.join(path, "index"), self.index,
+                      extra={"engine": {"top_t": self.top_t,
+                                        "rerank_budget": self.rerank_budget,
+                                        "bq": self.bq}})
+        wal = getattr(self.index, "_wal", None)
+        if wal is not None:
+            wal.rotate(self.index.wal_seq)
+
+    @classmethod
+    def open(cls, path: str, *, wal: bool = False, fsync: str = "always"):
+        """Reopen a saved engine: load the latest valid snapshot (the
+        atomic-swap `.old` fallback included) and replay any committed
+        WAL records past its wal_seq — recovery lands bitwise on the last
+        committed state, never a torn hybrid. `wal=True` (or a log
+        already on disk) leaves a WAL attached so every subsequent
+        mutation is logged transparently; `fsync` is its durability
+        policy ("always" | "never")."""
+        from repro.ckpt.index_store import load_snapshot
+        from repro.ckpt.wal import MutationWAL
+        idx, extra = load_snapshot(os.path.join(path, "index"),
+                                   expect_kind="MutableIVF")
+        cfg = dict(extra.get("engine", {}))
+        eng = cls(idx, top_t=int(cfg.get("top_t", 8)),
+                  rerank_budget=int(cfg.get("rerank_budget", 256)),
+                  bq=int(cfg.get("bq", 128)))
+        wal_path = os.path.join(path, "wal.log")
+        if wal or os.path.exists(wal_path):
+            idx.attach_wal(MutationWAL(wal_path, fsync=fsync,
+                                       start_seq=idx.wal_seq))
+        return eng

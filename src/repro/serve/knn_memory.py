@@ -141,7 +141,16 @@ class KNNMemory:
         segment: only over positions added with that segment label;
         filter_mask: arbitrary (n_total,)-prefix bitmap. Any combination;
         escalate=False skips the thin-window re-probe (search.py §3.9).
+
+        Hardened serving edge (DESIGN.md §3.11), same contract as
+        AnnEngine.search: k/top_t must be positive ints (an explicit
+        top_t=0 raises instead of silently retrieving nothing), queries
+        are dtype/shape/finiteness-checked, and nq=0 returns empties.
         """
+        from repro.serve.engine import _positive_int, validate_queries
+        k = _positive_int("k", k)
+        top_t = _positive_int("top_t", top_t)
+        q = validate_queries(q, self.index.centroids.shape[1])
         if self.engine == "jit":
             from repro.core.search import pad_queries
             if (recency is None and segment is None and filter_mask is None):
@@ -169,6 +178,23 @@ class KNNMemory:
                 escalate=escalate)
         safe = np.maximum(ids, 0)
         return ids, self.keys[safe], self.values[safe]
+
+    # ---------------------------------------------------------- durability
+    def save(self, path: str):
+        """Atomic versioned snapshot of the whole memory — index (with
+        tombstone state + router), value buffer, per-id segment labels,
+        engine choice (DESIGN.md §3.11)."""
+        from repro.ckpt.index_store import save_snapshot
+        save_snapshot(path, self)
+
+    @classmethod
+    def open(cls, path: str) -> "KNNMemory":
+        """Reload a saved memory; retrieval over the reopened object is
+        bitwise identical to the saved one (integrity-checked load —
+        CorruptSnapshotError on any torn/flipped byte)."""
+        from repro.ckpt.index_store import load_snapshot
+        mem, _ = load_snapshot(path, expect_kind="KNNMemory")
+        return mem
 
     def attend(self, q: np.ndarray, k: int = 32, top_t: int = 4,
                recency: Optional[int] = None, segment: Optional[int] = None,

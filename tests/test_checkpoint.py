@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt.checkpoint import CheckpointManager, restore, save
 from repro.configs import get_config
@@ -40,6 +41,39 @@ def test_atomic_save_overwrites_cleanly(tmp_path):
     save(p, {"x": jnp.ones(3)}, step=2)
     back, step, _ = restore(p, {"x": jnp.zeros(3)})
     assert step == 2 and float(back["x"][0]) == 1.0
+
+
+def test_restore_missing_step_is_clear(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        m.restore({"x": jnp.zeros(2)})
+    m.save(3, {"x": jnp.zeros(2)})
+    with pytest.raises(FileNotFoundError, match="step 7"):
+        m.restore({"x": jnp.zeros(2)}, step=7)
+
+
+def test_retention_never_deletes_just_written(tmp_path):
+    # keep < 1 is clamped: the newest write always survives
+    m = CheckpointManager(str(tmp_path), keep=0)
+    m.save(1, {"x": jnp.zeros(2)})
+    assert m.steps() == [1]
+    # an out-of-order save of an OLD step is still the newest write
+    m2 = CheckpointManager(str(tmp_path / "b"), keep=1)
+    for s in (5, 9, 2):
+        m2.save(s, {"x": jnp.full((2,), s)})
+    assert 2 in m2.steps()
+    back, step, _ = m2.restore({"x": jnp.zeros(2)}, step=2)
+    assert step == 2 and float(back["x"][0]) == 2
+
+
+def test_steps_ignores_stray_dirs(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(4, {"x": jnp.zeros(2)})
+    for stray in ("notes", "ckpt_abc", "ckpt_00000009.tmp"):
+        (tmp_path / stray).mkdir()
+    (tmp_path / "ckpt_readme.txt").write_text("hi")
+    assert m.steps() == [4]
+    assert m.latest_step() == 4
 
 
 def test_train_state_roundtrip_with_real_model(tmp_path):
