@@ -1,81 +1,234 @@
-"""Closed-loop serving QPS + latency percentiles through AnnEngine.
+"""Multi-client serving benchmark: front-end dynamic batching vs direct
+engine calls under mixed traffic (ISSUE 8, DESIGN.md §3.12).
 
-Rewritten for the current serving surface (the seed-era version called
-search_numpy on a bare IVFIndex; serving has since become
-serve/engine.AnnEngine over a MutableIVF with the jit batched pipeline,
-bucket-padded queries, and a pluggable probe router — DESIGN.md §3.7/§3.10).
+Drives N concurrent closed-loop clients — a mix of unfiltered and
+tenant-filtered traffic, plus a mutator interleaving adds and soft
+removes — against the SAME AnnEngine two ways:
 
-Measures what a serving operator actually sees: closed-loop single-stream
-throughput (next request issues when the previous returns) and per-call
-p50/p95/p99 latency, per batch size, flat vs tree-routed probe.
+- **direct**: every client calls `engine.search` itself, serialized by a
+  lock (the engine is a single-caller edge; this is what an operator
+  without the front-end deploys). Each single-query call pays a full
+  padded bucket-8 jit dispatch, and tenant filtering pays a host
+  compose + device upload per call.
+- **frontend**: clients go through ServingFrontend. Concurrent
+  singletons coalesce into one padded call (~Nx less compute at the
+  same bucket), and tenant filters are served from the epoch-cached
+  device bitmap.
 
-Hardware caveat (DESIGN.md §3): 1-core CPU container — ABSOLUTE numbers are
-a proxy; the flat-vs-tree and batch-scaling ratios are the portable signal.
+Reported per mode/client-count: p50/p95/p99 request latency, raw QPS,
+and QPS-at-SLO (goodput: only requests finishing within SLO_MS count).
+The acceptance gate of ISSUE 8 is asserted inline at >=8 clients:
+frontend throughput must exceed direct at equal-or-better p99. A
+determinism sanity check (coalesced == solo, bitwise) runs before the
+timed phases.
+
+Hardware caveat (DESIGN.md §3): 1-core CPU container — ABSOLUTE numbers
+are a proxy; the frontend-vs-direct ratios are the portable signal. A
+fixed-shape GEMM calibration row (`qps_calib_gemm_*`) lets the CI gate
+normalize across machines.
 
     PYTHONPATH=src python -m benchmarks.bench_qps [--smoke] [--out PATH]
 """
 from __future__ import annotations
 
 import argparse
+import threading
+import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, emit
 from repro.core import true_neighbors
 from repro.data.vectors import glove_like
+from repro.serve.api import SearchParams
 from repro.serve.engine import AnnEngine
+from repro.serve.frontend import ServingFrontend
+
+SLO_MS = 50.0        # per-request latency objective for the goodput metric
+K = 10
 
 
-def recall_at(ids, tn, k=10):
+def recall_at(ids, tn, k=K):
     return float((ids[:, :k, None] == tn[:, None, :k]).any(-1).mean())
 
 
-def _closed_loop(eng: AnnEngine, Q: np.ndarray, batch: int, reps: int):
-    """Closed-loop drive: issue `reps` batched requests back-to-back,
-    rotating through the query set. Returns (lat_us list, ids of the
-    last call)."""
-    nq = Q.shape[0]
-    lat, ids = [], None
-    for i in range(reps):
-        off = (i * batch) % max(1, nq - batch + 1)
-        qb = Q[off:off + batch]
+def _best_of(fn, n=3):
+    out = []
+    for _ in range(n):
         with Timer() as t:
-            ids, _ = eng.search(qb, k=10)
-        lat.append(t.us)
-    return lat, ids
+            jax.block_until_ready(fn())
+        out.append(t.us)
+    return min(out)
+
+
+def _percentiles(lat_us):
+    p50, p95, p99 = np.percentile(lat_us, [50, 95, 99])
+    return float(p50), float(p95), float(p99)
+
+
+def _mixed_traffic(search_one, mutate, n_clients: int, reps: int,
+                   Q: np.ndarray):
+    """Closed-loop drive: `n_clients` threads each issue `reps`
+    single-query requests (odd-numbered clients under a tenant filter),
+    while a mutator thread interleaves an add and soft removes. Returns
+    (per-request latencies us, wall seconds)."""
+    lat = [[] for _ in range(n_clients)]
+    nq = Q.shape[0]
+    stop = threading.Event()
+
+    def client(cid):
+        tenant = cid % 2 == 1
+        for i in range(reps):
+            q = Q[(cid * reps + i) % nq][None]
+            t0 = time.perf_counter()
+            search_one(q, tenant)
+            lat[cid].append((time.perf_counter() - t0) * 1e6)
+
+    def mutator():
+        j = 0
+        while not stop.is_set():
+            mutate(j)
+            j += 1
+            if stop.wait(0.05):
+                return
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    mt = threading.Thread(target=mutator)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    mt.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    mt.join()
+    wall = time.perf_counter() - t0
+    return np.concatenate(lat), wall
+
+
+def _report(name: str, lat_us: np.ndarray, wall_s: float, extra: str = ""):
+    p50, p95, p99 = _percentiles(lat_us)
+    qps = len(lat_us) / wall_s
+    good = int((lat_us <= SLO_MS * 1e3).sum()) / wall_s
+    emit(name, p50,
+         f"qps={qps:.0f} qps@slo{SLO_MS:.0f}ms={good:.0f} "
+         f"p50={p50:.0f}us p95={p95:.0f}us p99={p99:.0f}us{extra}")
+    return qps, good, p99
 
 
 def run(n: int, c: int, nq: int, train_iters: int, reps: int, label: str,
-        batches=(1, 16, 128)):
+        client_counts=(1, 8)):
     ds = glove_like(n=n, d=100, nq=nq)
-    tn = true_neighbors(ds.X, ds.Q, k=10)
-    for router, rkw, tag in ((None, None, "flat"),
-                             ("tree", dict(t_route=2), "tree")):
-        eng = AnnEngine.build(jax.random.PRNGKey(0), ds.X, c,
-                              spill_mode="soar", pq_subspaces=25,
-                              top_t=max(6, round(c / 200)),
-                              rerank_budget=300, router=router,
-                              router_kw=rkw, train_iters=train_iters)
-        full_ids, _ = eng.search(ds.Q, k=10)          # quality + warmup
-        rec = recall_at(full_ids, tn)
-        for b in batches:
-            _closed_loop(eng, ds.Q, b, 2)             # compile this bucket
-            lat, _ = _closed_loop(eng, ds.Q, b, reps)
-            qps = b * len(lat) / (sum(lat) / 1e6)
-            p50, p95, p99 = np.percentile(lat, [50, 95, 99])
-            emit(f"qps_engine_{tag}_b{b}_{label}", p50 / b,
-                 f"recall@10={rec:.3f} qps={qps:.0f} p50={p50:.0f}us "
-                 f"p95={p95:.0f}us p99={p99:.0f}us batch={b}")
+    tn = true_neighbors(ds.X, ds.Q, k=K)
+    eng = AnnEngine.build(jax.random.PRNGKey(0), ds.X, c,
+                          spill_mode="soar", pq_subspaces=25,
+                          top_t=max(6, round(c / 200)), rerank_budget=300,
+                          train_iters=train_iters)
+    tenant_ids = np.arange(0, n, 2)
+    tenant_mask = np.zeros(n, np.uint8)
+    tenant_mask[tenant_ids] = 1
+
+    # calibration row: fixed-shape GEMM, machine-speed proxy for the gate
+    # (median of start/mid/end samples — see bench_build.py)
+    A = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2048, 256)), jnp.float32)
+    B = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (256, 2048)), jnp.float32)
+    calib = [_best_of(lambda: A @ B)]
+
+    # quality + warmup: full batch, singleton bucket, tenant filter
+    full_ids, _ = eng.search(ds.Q, k=K)
+    rec = recall_at(full_ids, tn)
+    eng.search(ds.Q[:1], k=K)
+    eng.search(ds.Q[:1], k=K, filter_mask=tenant_mask)
+    with Timer() as t_full:
+        eng.search(ds.Q, k=K)
+    emit(f"qps_serve_full_{label}", t_full.us / ds.Q.shape[0],
+         f"recall@10={rec:.3f} full-batch engine reference "
+         f"({ds.Q.shape[0]} queries/call)")
+
+    lock = threading.Lock()
+
+    def direct_search(q, tenant):
+        with lock:
+            if tenant:
+                eng.search(q, k=K, filter_mask=tenant_mask)
+            else:
+                eng.search(q, k=K)
+
+    def direct_mutate(j):
+        with lock:
+            if j % 4 == 3:
+                eng.add(ds.X[:8] + np.float32(0.01 * j))
+            else:
+                eng.remove([(7 * j) % n], hard=False)
+
+    for n_clients in client_counts:
+        lat_d, wall_d = _mixed_traffic(direct_search, direct_mutate,
+                                       n_clients, reps, ds.Q)
+        qps_d, good_d, p99_d = _report(
+            f"qps_direct_c{n_clients}_{label}", lat_d, wall_d,
+            f" clients={n_clients}")
+
+        fe = ServingFrontend(eng, policy="local",
+                             max_batch=max(n_clients, 2),
+                             default_deadline_ms=SLO_MS)
+        fe.register_tenant("t", mask=tenant_mask.astype(bool))
+        # determinism sanity: a coalesced front-end answer is bitwise the
+        # solo engine answer at the same epoch
+        futs = [fe.submit(ds.Q[i:i + 1], SearchParams(k=K))
+                for i in range(4)]
+        got = np.concatenate([f.result().ids for f in futs])
+        ref, _ = eng.search(ds.Q[:4], k=K)
+        assert np.array_equal(got, ref), "coalesced != solo (determinism)"
+        fe.search(ds.Q[:1], SearchParams(k=K, tenant="t"))   # warm tenant
+
+        def fe_search(q, tenant, fe=fe):
+            fe.search(q, SearchParams(
+                k=K, tenant="t" if tenant else None, deadline_ms=SLO_MS))
+
+        def fe_mutate(j, fe=fe):
+            if j % 4 == 3:
+                fe.add(ds.X[:8] + np.float32(0.01 * j))
+            else:
+                fe.remove([(7 * j) % n], hard=False)
+
+        lat_f, wall_f = _mixed_traffic(fe_search, fe_mutate,
+                                       n_clients, reps, ds.Q)
+        stats = dict(fe.stats)
+        fe.close()
+        gain = (len(lat_f) / wall_f) / max(len(lat_d) / wall_d, 1e-9)
+        qps_f, good_f, p99_f = _report(
+            f"qps_frontend_c{n_clients}_{label}", lat_f, wall_f,
+            f" clients={n_clients} gain={gain:.2f}x "
+            f"coalesced={stats['coalesced']}/{stats['requests']}")
+        if n_clients >= 8:
+            # ISSUE 8 acceptance: batching beats direct dispatch at >=8
+            # concurrent clients WITHOUT giving up tail latency
+            assert qps_f > qps_d, (
+                f"frontend qps {qps_f:.0f} <= direct {qps_d:.0f} "
+                f"at {n_clients} clients")
+            assert p99_f <= p99_d, (
+                f"frontend p99 {p99_f:.0f}us worse than direct "
+                f"{p99_d:.0f}us at {n_clients} clients")
+        calib.append(_best_of(lambda: A @ B))
+
+    emit(f"qps_calib_gemm_{label}", sorted(calib)[len(calib) // 2],
+         "2048x256x2048 f32 GEMM (gate normalization row; median of "
+         "per-phase samples)")
 
 
 def main(smoke: bool = False, out: str = ""):
     from benchmarks import common
     mark = len(common.ROWS)
     if smoke:
-        run(n=10_000, c=64, nq=160, train_iters=3, reps=15, label="smoke")
+        run(n=10_000, c=64, nq=160, train_iters=3, reps=20, label="smoke")
     else:
-        run(n=100_000, c=500, nq=400, train_iters=8, reps=60, label="100k")
+        run(n=100_000, c=500, nq=400, train_iters=8, reps=50,
+            label="100k", client_counts=(1, 8, 16))
     if out:
         from benchmarks.common import write_rows
         write_rows(out, common.ROWS[mark:], smoke=smoke)

@@ -224,7 +224,8 @@ def _write_state(path: str, kind: str, meta: dict, arrays: dict,
     atomic_replace_dir(tmp, path)
 
 
-def _read_arrays(path: str, manifest: dict) -> dict:
+def _read_arrays(path: str, manifest: dict,
+                 only_prefix: Optional[str] = None) -> dict:
     algo = manifest["checksum_algo"]
     apath = os.path.join(path, "arrays.bin")
     if not os.path.exists(apath):
@@ -233,6 +234,9 @@ def _read_arrays(path: str, manifest: dict) -> dict:
     out = {}
     with open(apath, "rb") as f:
         for e in manifest["arrays"]:
+            if only_prefix is not None \
+                    and not e["name"].startswith(only_prefix):
+                continue
             if e["offset"] + e["nbytes"] > size:
                 raise CorruptSnapshotError(
                     f"{apath} truncated: array {e['name']!r} needs bytes "
@@ -430,16 +434,19 @@ def _knn_state(mem):
     arrays["values"] = mem.values
     if mem.segments is not None:
         arrays["segments"] = mem.segments
-    return "KNNMemory", {"engine": mem.engine, "index": imeta}, arrays
+    return "KNNMemory", {"engine": mem.engine, "top_t": mem.top_t,
+                         "index": imeta}, arrays
 
 
 def _knn_from(meta, arrays):
+    from repro.serve.api import DEFAULT_TOP_T
     from repro.serve.knn_memory import KNNMemory
     iarrays = {k[len("index."):]: v for k, v in arrays.items()
                if k.startswith("index.")}
     return KNNMemory(index=_mutable_from(meta["index"], iarrays),
                      values=arrays["values"], engine=meta["engine"],
-                     segments=arrays.get("segments"))
+                     segments=arrays.get("segments"),
+                     top_t=int(meta.get("top_t", DEFAULT_TOP_T)))
 
 
 _LOADERS = {"IVFIndex": _ivf_from, "MutableIVF": _mutable_from,
@@ -447,14 +454,39 @@ _LOADERS = {"IVFIndex": _ivf_from, "MutableIVF": _mutable_from,
 
 
 # ---------------------------------------------------------------- main API
+EXTRA_PREFIX = "extra."
+
+
 def save_snapshot(path: str, obj, *, extra: Optional[dict] = None,
+                  extra_arrays: Optional[dict] = None,
                   algo: Optional[str] = None):
     """Atomically snapshot an index object (IVFIndex / MutableIVF /
     PackedIVF / KNNMemory) to `path`. `extra` is a JSON-able dict stored
-    in the manifest (e.g. engine serving params); `algo` overrides the
-    checksum algorithm (default: crc32c when available, else crc32)."""
+    in the manifest (e.g. engine serving params); `extra_arrays` is a
+    name → ndarray dict of caller-owned arrays that ride the snapshot
+    under an ``extra.`` name prefix with the same CRC/atomicity
+    guarantees (the serving front-end stores per-tenant filter bitmaps
+    this way, §3.12) and load back via `load_extra_arrays`; `algo`
+    overrides the checksum algorithm (default: crc32c when available,
+    else crc32)."""
     kind, meta, arrays = _state_of(obj, extra)
+    for name, arr in (extra_arrays or {}).items():
+        key = EXTRA_PREFIX + name
+        if key in arrays:
+            raise ValueError(f"duplicate extra array name {name!r}")
+        arrays[key] = arr
     _write_state(path, kind, meta, arrays, algo=algo)
+
+
+def load_extra_arrays(path: str) -> dict:
+    """Read back the `extra_arrays` stored alongside a snapshot (CRC-
+    verified, ``extra.`` prefix stripped); {} when none were saved. The
+    object codecs ignore these entries, so layers above the index can
+    version their own state without touching the kind formats."""
+    path = resolve_snapshot_dir(path)
+    manifest = read_manifest(path)
+    raw = _read_arrays(path, manifest, only_prefix=EXTRA_PREFIX)
+    return {k[len(EXTRA_PREFIX):]: v for k, v in raw.items()}
 
 
 def load_snapshot(path: str, *, expect_kind: Optional[str] = None):

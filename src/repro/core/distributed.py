@@ -30,8 +30,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.build import build_ivf_sharded, spill_plan
 from repro.core.router import FlatRouter, TreeRouter
-from repro.core.search import (_pad_topk, dedup_topk_window, pack_ivf,
-                               window_pq_scores)
+from repro.core.search import (_pad_topk, _search_block, dedup_topk_window,
+                               pack_ivf, window_pq_scores)
 from repro.kernels.soar_assign import assign_fused
 from repro.quant.pq import PQCodebook
 
@@ -296,11 +296,71 @@ def _shard_map_variants(local_search, mesh, spec, axes, with_filter,
                      out_specs=(P(), P()), check_rep=False)
 
 
+def make_replicated_search(mesh, axes: Tuple[str, ...], *, top_t: int,
+                           final_k: int, rerank_budget: int = 256,
+                           multiplicity: int = 2, with_filter: bool = False,
+                           escalate: bool = True, params=None):
+    """DATA-PARALLEL replica fan-out (DESIGN.md §3.12): the full packed
+    index is REPLICATED on every device and the QUERY batch is sharded
+    over `axes` — the dual of make_distributed_search, which shards the
+    database and replicates queries. Returns a jit-able
+    fn(PackedIVF, Q[, filter]) → (ids, scores), Q row count divisible by
+    the mesh axis size (serve callers get this from
+    pad_queries(multiple=R)).
+
+    Each replica runs the SAME single-host candidate-local pipeline
+    (`_search_block`, filtered escalation included) on its query slice
+    with NO collectives — per-query results are bitwise identical to the
+    single-device path, so a serve-time policy can flip between replica
+    and shard-parallel execution without changing any answer. Replica
+    fan-out is the right policy while the index fits one device and
+    throughput is query-bound (the front-end's default when devices > 1);
+    the shard-parallel path takes over when n outgrows device memory.
+
+    `params`: optional serve/api.SearchParams overriding k/top_t/
+    rerank_budget/escalate — the unified request API's route into the
+    distributed layer (make_distributed_search takes it too).
+
+    with_filter=True: the fn takes a trailing (n,) uint8 GLOBAL-id bitmap
+    (replicated — every replica holds all ids), e.g. a tenant bitmap from
+    the front-end's TenantFilterBank.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    if params is not None:
+        p = params.validate(default_top_t=top_t,
+                            default_rerank=rerank_budget)
+        top_t, final_k = p.top_t, p.k
+        rerank_budget, escalate = p.rerank_budget, p.escalate
+
+    a = axes if len(axes) > 1 else axes[0]
+
+    def local(packed, Q, filt=None):
+        return _search_block(packed, Q, top_t, final_k, rerank_budget,
+                             multiplicity, filt, escalate)
+
+    fn = (local if with_filter
+          else (lambda packed, Q: local(packed, Q)))
+    specs = [P(), P(a)] + ([P()] if with_filter else [])
+    return shard_map(fn, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=(P(a), P(a)), check_rep=False)
+
+
+def _apply_params(params, top_t, final_k):
+    """Resolve a serve/api.SearchParams against a distributed maker's
+    kwargs — the unified request API's seam into this layer."""
+    if params is None:
+        return top_t, final_k, True
+    p = params.validate(default_top_t=top_t)
+    return p.top_t, p.k, p.escalate
+
+
 def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
-                            final_k: int, multiplicity: int = 2,
+                            final_k: int = 10, multiplicity: int = 2,
                             with_filter: bool = False,
                             with_router: bool = False,
-                            t_route: Optional[int] = None):
+                            t_route: Optional[int] = None,
+                            params=None):
     """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global.
 
     Pass multiplicity ≥ 1 + n_spills when serving multi-spill shards
@@ -317,7 +377,12 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
     through each shard's two-level router at the given `t_route` (default
     ceil(S/8)) instead of the flat local GEMM — the per-shard O(c)→O(√c)
     probe reduction, shard-local like everything else.
+
+    params: optional serve/api.SearchParams whose k/top_t override the
+    kwargs (the unified request API, DESIGN.md §3.12).
     """
+    top_t, final_k, _ = _apply_params(params, top_t, final_k)
+
     def local_search(ivf: ShardedIVF, Q, filt=None, srt=None):
         # leading shard dim is size 1 inside shard_map — squeeze it
         C = ivf.centroids[0]
@@ -361,11 +426,12 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
 
 
 def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
-                               final_k: int, rerank_k: int = 256,
+                               final_k: int = 10, rerank_k: int = 256,
                                q_chunk: int = 128, multiplicity: int = 2,
                                with_filter: bool = False,
                                with_router: bool = False,
-                               t_route: Optional[int] = None):
+                               t_route: Optional[int] = None,
+                               params=None):
     """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
 
     Per shard per q_chunk tile: batched centroid top-t → PQ-score the
@@ -380,7 +446,10 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
     uint8 local-id bitmap argument masking candidates pre-dedup.
     with_router/t_route as in make_distributed_search: a trailing
     ShardedTreeRouter argument replaces the flat local probe.
+    params: optional serve/api.SearchParams overriding k/top_t (§3.12).
     """
+    top_t, final_k, _ = _apply_params(params, top_t, final_k)
+
     def local_search(ivf: ShardedIVFPQ, Q, filt=None, srt=None):
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]

@@ -64,6 +64,49 @@ def _grow_rows(arr: np.ndarray, n_new: int, fill) -> np.ndarray:
     return out
 
 
+class EpochLRU:
+    """Epoch-keyed LRU of derived values (device filter bitmaps).
+
+    Generalizes the PR 5 standing-filter cache OUT of MutableIVF: an
+    entry is (epoch, value) under a caller key; `get` returns the cached
+    value only while the epoch matches, else rebuilds via the callback
+    and refreshes the entry. Capacity-1 instances back the index's own
+    standing tombstone bitmap; the serving front-end's TenantFilterBank
+    (serve/frontend.py, DESIGN.md §3.12) holds a capacity-N instance
+    keyed by tenant, so steady-state tenant serving pays zero per-search
+    host composition or upload, and a mutation (epoch bump) invalidates
+    every tenant's bitmap at once without touching device memory until a
+    tenant is next served."""
+
+    def __init__(self, capacity: int = 1):
+        from collections import OrderedDict
+        self.capacity = max(1, int(capacity))
+        self._d = OrderedDict()
+        self.fills = 0              # cache-miss rebuilds (tests/telemetry)
+
+    def get(self, key, epoch, build):
+        hit = self._d.get(key)
+        if hit is not None and hit[0] == epoch:
+            self._d.move_to_end(key)
+            return hit[1]
+        val = build()
+        self.fills += 1
+        self._d[key] = (epoch, val)
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+        return val
+
+    def drop(self, key):
+        self._d.pop(key, None)
+
+    def __contains__(self, key):
+        return key in self._d
+
+    def __len__(self):
+        return len(self._d)
+
+
 @dataclass
 class MutableIVF:
     """Mutable padded-partition SOAR index over frozen VQ/PQ codebooks."""
@@ -94,10 +137,10 @@ class MutableIVF:
     _dirty_parts: Optional[np.ndarray] = field(default=None, repr=False)
     _dirty_ids: int = field(default=0, repr=False)      # rerank rows synced
     # standing-filter cache: device uint8 alive bitmap, keyed by an epoch
-    # bumped whenever `alive` mutates (add/remove)
+    # bumped whenever `alive` mutates (add/remove) — a capacity-1 EpochLRU
+    # (the front-end's per-tenant bank is the capacity-N generalization)
     _alive_epoch: int = field(default=0, repr=False)
-    _filter_dev: Optional[jax.Array] = field(default=None, repr=False)
-    _filter_epoch: int = field(default=-1, repr=False)
+    _filter_cache: EpochLRU = field(default_factory=EpochLRU, repr=False)
     # serving-router cache, keyed by the live-partition mask (see
     # _serving_router)
     _router_dev: Optional[object] = field(default=None, repr=False)
@@ -435,15 +478,13 @@ class MutableIVF:
     def standing_filter(self) -> jax.Array:
         """Cached DEVICE uint8 alive bitmap at capacity width — the
         no-user-subset standing filter (soft tombstones). Rebuilt and
-        re-uploaded only when `alive` has mutated since the last call, so
+        re-uploaded only when `alive` has mutated since the last call
+        (EpochLRU keyed on the alive epoch + capacity width), so
         steady-state serving with a standing filter pays zero per-search
         host work or transfer."""
-        if (self._filter_dev is None
-                or self._filter_epoch != self._alive_epoch
-                or self._filter_dev.shape[0] != self.alive.shape[0]):
-            self._filter_dev = jnp.asarray(self.alive.astype(np.uint8))
-            self._filter_epoch = self._alive_epoch
-        return self._filter_dev
+        return self._filter_cache.get(
+            None, (self._alive_epoch, self.alive.shape[0]),
+            lambda: jnp.asarray(self.alive.astype(np.uint8)))
 
     def filter_bitmap(self, mask: Optional[np.ndarray] = None,
                       ids: Optional[Sequence[int]] = None) -> np.ndarray:

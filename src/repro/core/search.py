@@ -516,14 +516,24 @@ def bq_bucket(nq: int, bq: int) -> int:
     return min(bq, max(8, 1 << (max(nq, 1) - 1).bit_length()))
 
 
-def pad_queries(Q: np.ndarray, bq_cap: int):
+def pad_queries(Q: np.ndarray, bq_cap: int, multiple: int = 1):
     """Host-side bucket padding for serving entry points: (nq, d) float32
     → (padded Q, nq, bucket). Callers pass `bq=bucket` to
-    search_jit_batched and slice results back to [:nq]."""
+    search_jit_batched and slice results back to [:nq].
+
+    `multiple` additionally pads the batch to a multiple of that many
+    rows — the replica fan-out path (core/distributed.py
+    make_replicated_search) shards the padded batch over R devices, so
+    the row count must divide by R as well as land on a compile-cache
+    bucket. Power-of-two R ≤ bucket costs no extra padding; otherwise the
+    batch rounds up to lcm(bucket, R) rows. Pad rows are zero queries
+    whose results are sliced off — per-query results are unaffected
+    (every pipeline stage is query-local)."""
     Q = np.atleast_2d(np.asarray(Q, np.float32))
     nq = Q.shape[0]
     bq = bq_bucket(nq, bq_cap)
-    pad = (-nq) % bq
+    step = bq * multiple // np.gcd(bq, multiple) if multiple > 1 else bq
+    pad = (-nq) % step
     Qp = np.pad(Q, ((0, pad), (0, 0))) if pad else Q
     return Qp, nq, bq
 

@@ -9,6 +9,7 @@ counterpart: add/remove/search against a live index (DESIGN.md §3.7).
 from __future__ import annotations
 
 import os
+import time
 from typing import Optional
 
 import jax
@@ -17,47 +18,13 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-
-
-def _positive_int(name: str, v) -> int:
-    """Serving-edge bounds check: k/top_t/rerank_budget/bq must be
-    positive integers — an explicit 0 (or a float, or a bool) is a caller
-    bug and gets a clear error instead of silently searching nothing or
-    falling back to a default."""
-    if isinstance(v, bool) or not isinstance(v, (int, np.integer)) or v < 1:
-        raise ValueError(f"{name} must be a positive integer, got {v!r}")
-    return int(v)
-
-
-def validate_queries(Q, d: int, *, sanitize: bool = False) -> np.ndarray:
-    """Query hygiene for serving entry points (DESIGN.md §3.11): returns
-    a (nq, d) float32 batch or raises a clear ValueError. Rejects
-    non-numeric dtypes and wrong rank; non-finite values (NaN/Inf —
-    including float64 magnitudes that overflow the float32 cast) raise
-    unless `sanitize`, which zeroes them. Without this, one NaN query
-    poisons its whole jit tile's scores with no error anywhere."""
-    Q = np.asarray(Q)
-    if (Q.dtype == object or not np.issubdtype(Q.dtype, np.number)
-            or np.issubdtype(Q.dtype, np.complexfloating)):
-        raise ValueError(
-            f"queries must be real-numeric, got dtype {Q.dtype}")
-    Q = np.atleast_2d(Q)
-    if Q.ndim != 2:
-        raise ValueError(
-            f"queries must be (nq, d) or (d,), got shape {tuple(Q.shape)}")
-    from repro.core.router import check_query_dim
-    check_query_dim(Q, d)
-    with np.errstate(over="ignore"):   # cast overflow → inf, caught below
-        Q = Q.astype(np.float32, copy=False)
-    if Q.size and not np.isfinite(Q).all():
-        if sanitize:
-            Q = np.nan_to_num(Q, nan=0.0, posinf=0.0, neginf=0.0)
-        else:
-            bad = int((~np.isfinite(Q)).sum())
-            raise ValueError(
-                f"queries contain {bad} non-finite value(s) (NaN/Inf); "
-                f"pass sanitize=True to zero them")
-    return Q
+# validation + defaults live on the unified request API (serve/api.py,
+# DESIGN.md §3.12); re-exported here because this module was their
+# historical home and external callers import them from the engine edge
+from repro.serve.api import (_positive_int, validate_queries,  # noqa: F401
+                             SearchParams, SearchResult,
+                             DEFAULT_TOP_T, DEFAULT_RERANK_BUDGET,
+                             DEFAULT_BQ)
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -114,8 +81,9 @@ class AnnEngine:
     and for joining search results back to caller-side payloads.
     """
 
-    def __init__(self, index, *, top_t: int = 8, rerank_budget: int = 256,
-                 bq: int = 128):
+    def __init__(self, index, *, top_t: int = DEFAULT_TOP_T,
+                 rerank_budget: int = DEFAULT_RERANK_BUDGET,
+                 bq: int = DEFAULT_BQ):
         self.index = index
         self.top_t = _positive_int("top_t", top_t)
         self.rerank_budget = _positive_int("rerank_budget", rerank_budget)
@@ -123,8 +91,10 @@ class AnnEngine:
 
     @classmethod
     def build(cls, key, X, n_partitions: int, *, spill_mode: str = "soar",
-              lam: float = 1.0, pq_subspaces: int = 0, top_t: int = 8,
-              rerank_budget: int = 256, bq: int = 128, router=None,
+              lam: float = 1.0, pq_subspaces: int = 0,
+              top_t: int = DEFAULT_TOP_T,
+              rerank_budget: int = DEFAULT_RERANK_BUDGET,
+              bq: int = DEFAULT_BQ, router=None,
               router_kw=None, **build_kw):
         """Sharded build (core/build.py) → serving engine.
 
@@ -156,56 +126,90 @@ class AnnEngine:
                sanitize: bool = False):
         """(nq, d) queries → (ids (nq, k) int32, scores (nq, k)).
 
-        The engine is the hardened serving edge (DESIGN.md §3.11): Q is
-        dtype/shape/finiteness-validated (`sanitize=True` zeroes NaN/Inf
-        instead of raising), k/top_t are bounds-checked — an explicit
-        top_t=0 raises rather than silently falling back to the default —
-        and an empty batch returns empty (0, k) results without touching
-        the jit pipeline.
+        Thin shim over the unified request API (DESIGN.md §3.12): builds
+        a SearchParams and routes through `search_request` — results are
+        bitwise identical to constructing the params directly (pinned by
+        tests/test_serve_api.py). See SearchParams for the full contract;
+        the engine remains the hardened serving edge (dtype/finiteness
+        validation, explicit top_t=0 raises, nq=0 returns empties).
 
         filter_ids / filter_mask restrict the search to a subset of live
-        points (an explicit id allowlist and/or a bitmap over point ids);
-        both compose with the index's standing soft-tombstone filter. The
-        filtered path runs the selectivity-escalating jit pipeline
-        (DESIGN.md §3.9) — pass escalate=False when the filter is known to
-        be fat (e.g. a handful of soft tombstones) to skip the fixed
-        second probe pass. Unfiltered serving with no soft tombstones
-        stays on the exact PR 4 trace.
+        points; both compose with the index's standing soft-tombstone
+        filter. The filtered path runs the selectivity-escalating jit
+        pipeline (§3.9) — pass escalate=False when the filter is known to
+        be fat. Unfiltered serving with no soft tombstones stays on the
+        exact PR 4 trace.
+        """
+        r = self.search_request(Q, SearchParams(
+            k=k, top_t=top_t, filter_ids=filter_ids,
+            filter_mask=filter_mask, escalate=escalate, sanitize=sanitize))
+        return r.ids, r.scores
+
+    def search_request(self, Q, params: Optional[SearchParams] = None, *,
+                       _filter_dev=None) -> SearchResult:
+        """Structured serving entry point: (nq, d) queries + SearchParams
+        → SearchResult (DESIGN.md §3.12).
+
+        Validation (query hygiene + k/top_t/rerank_budget bounds) runs
+        through `SearchParams.validate()` — the single hardened path
+        shared with KNNMemory. `_filter_dev` is the front-end's seam: a
+        pre-composed DEVICE filter bitmap (tenant ∧ alive, cached by the
+        TenantFilterBank) that skips the per-call host composition and
+        upload `serving_filter` would pay for a user subset.
         """
         from repro.core.router import clamp_top_t
         from repro.core.search import pad_queries, search_jit_batched
-        k = _positive_int("k", k)
-        top_t = (self.top_t if top_t is None
-                 else _positive_int("top_t", top_t))
+        p = (params or SearchParams()).validate(
+            default_top_t=self.top_t, default_rerank=self.rerank_budget)
         Q = validate_queries(Q, self.index.centroids.shape[1],
-                             sanitize=sanitize)
+                             sanitize=p.sanitize)
+        epoch = getattr(self.index, "_alive_epoch", -1)
         if Q.shape[0] == 0:
-            return np.empty((0, k), np.int32), np.empty((0, k), np.float32)
-        filt, escalate = self.index.serving_filter(
-            mask=filter_mask, ids=filter_ids, escalate=escalate)
+            return SearchResult(np.empty((0, p.k), np.int32),
+                                np.empty((0, p.k), np.float32),
+                                epoch=epoch, tenant=p.tenant,
+                                deadline_ms=p.deadline_ms)
+        if _filter_dev is not None:
+            filt, escalate = _filter_dev, p.escalate
+        else:
+            filt, escalate = self.index.serving_filter(
+                mask=p.filter_mask, ids=p.filter_ids, escalate=p.escalate)
+        t0 = time.perf_counter()
         Qp, nq, bq = pad_queries(Q, self.bq)
         ids, vals = search_jit_batched(
             self.index.pack(), jnp.asarray(Qp),
-            top_t=clamp_top_t(top_t, self.index.centroids.shape[0]),
-            final_k=k, rerank_budget=max(self.rerank_budget, k),
+            top_t=clamp_top_t(p.top_t, self.index.centroids.shape[0]),
+            final_k=p.k, rerank_budget=max(p.rerank_budget, p.k),
             bq=bq, multiplicity=1 + max(self.index.n_spills, 1),
             filter=filt, escalate=escalate)
-        return np.asarray(ids)[:nq], np.asarray(vals)[:nq]
+        ids, vals = np.asarray(ids)[:nq], np.asarray(vals)[:nq]
+        return SearchResult(
+            ids, vals, engine_us=(time.perf_counter() - t0) * 1e6,
+            batch_size=nq, escalated=bool(escalate and filt is not None),
+            epoch=epoch, tenant=p.tenant, deadline_ms=p.deadline_ms)
 
     # ---------------------------------------------------------- durability
-    def save(self, path: str):
+    def save(self, path: str, *, extra: Optional[dict] = None,
+             extra_arrays: Optional[dict] = None):
         """Atomic, versioned snapshot of the full serving state — index
         (codebooks, router, partitions, tombstones, wal_seq) + engine
         config — under `path` (DESIGN.md §3.11). If a WAL is attached,
         the log is rotated afterwards: every record is covered by the
         snapshot's wal_seq, and sequence numbers continue monotonically,
-        so a crash between snapshot commit and rotation is benign."""
+        so a crash between snapshot commit and rotation is benign.
+
+        `extra` (JSON-able) and `extra_arrays` (name → ndarray) ride the
+        snapshot for layers above the engine — the serving front-end
+        stores its batching config and per-tenant filter bitmaps here
+        (§3.12) so a reopened index serves the same tenants."""
         from repro.ckpt.index_store import save_snapshot
         os.makedirs(path, exist_ok=True)
+        meta = {"engine": {"top_t": self.top_t,
+                           "rerank_budget": self.rerank_budget,
+                           "bq": self.bq}}
+        meta.update(extra or {})
         save_snapshot(os.path.join(path, "index"), self.index,
-                      extra={"engine": {"top_t": self.top_t,
-                                        "rerank_budget": self.rerank_budget,
-                                        "bq": self.bq}})
+                      extra=meta, extra_arrays=extra_arrays)
         wal = getattr(self.index, "_wal", None)
         if wal is not None:
             wal.rotate(self.index.wal_seq)
@@ -224,9 +228,10 @@ class AnnEngine:
         idx, extra = load_snapshot(os.path.join(path, "index"),
                                    expect_kind="MutableIVF")
         cfg = dict(extra.get("engine", {}))
-        eng = cls(idx, top_t=int(cfg.get("top_t", 8)),
-                  rerank_budget=int(cfg.get("rerank_budget", 256)),
-                  bq=int(cfg.get("bq", 128)))
+        eng = cls(idx, top_t=int(cfg.get("top_t", DEFAULT_TOP_T)),
+                  rerank_budget=int(cfg.get("rerank_budget",
+                                            DEFAULT_RERANK_BUDGET)),
+                  bq=int(cfg.get("bq", DEFAULT_BQ)))
         wal_path = os.path.join(path, "wal.log")
         if wal or os.path.exists(wal_path):
             idx.attach_wal(MutationWAL(wal_path, fsync=fsync,

@@ -1,0 +1,575 @@
+"""Production serving front-end (DESIGN.md §3.12): deadline-aware dynamic
+batching, standing multi-tenant filters, and replica fan-out in front of
+AnnEngine.
+
+The engines (serve/engine.py, serve/knn_memory.py) are synchronous,
+single-caller edges: every `search` pays its own padded jit dispatch, and
+concurrent callers must serialize around the mutable index themselves. This
+module adds the missing production layer:
+
+- **ServingFrontend** — an async request loop. Callers `submit` a
+  (queries, SearchParams) request and get a Future (or `await asearch`);
+  a single dispatcher thread owns the engine and coalesces compatible
+  pending requests into ONE padded `search_jit_batched` call. Because the
+  engine pads every batch to a power-of-two bucket anyway (pad_queries),
+  eight concurrent single-query callers cost ~one bucket-8 call instead of
+  eight — and coalescing reuses exactly the buckets solo calls would
+  compile, so it NEVER adds a compile (pinned by
+  tests/test_frontend.py::test_no_recompilation).
+
+- **Deadline-aware flushing** — a batch dispatches when it reaches
+  `max_batch` queries OR when the oldest compatible request has spent half
+  its `deadline_ms` budget waiting (clamped by `max_delay_ms`, so
+  steady-state trickle traffic still coalesces without stalling a
+  half-deadline on every 50 ms-budget request). `max_delay_ms=None` gives
+  the pure half-deadline policy.
+
+- **Determinism** — coalescing is result-invariant: every stage of the jit
+  pipeline is query-local, so a request served inside a coalesced batch is
+  BITWISE identical to the same request served solo at the same index
+  epoch (pinned by tests/test_frontend.py::test_coalesced_equals_solo).
+  Requests carrying an ad-hoc inline filter (raw bitmap/allowlist) have
+  per-request device state and dispatch solo; requests sharing a
+  registered `tenant` coalesce, since their filter is the same standing
+  bitmap.
+
+- **TenantFilterBank** — standing per-tenant subset filters. A tenant's
+  id-set is registered once; at dispatch the front-end serves from an
+  epoch-keyed LRU of DEVICE bitmaps (tenant ∧ alive), so per-request cost
+  is a dict hit, not an O(n) host compose + upload. Mutations bump the
+  index epoch and invalidate every cached bitmap at once (the
+  generalization of the capacity-1 standing-filter cache inside
+  MutableIVF — same EpochLRU).
+
+- **Mutations as barriers** — `add`/`remove` enqueue through the same
+  queue and dispatch only from the queue head, after every
+  earlier-submitted search; no search submitted after a mutation is
+  served before it. Epoch-tagged SearchResults make the ordering
+  observable.
+
+- **Replica fan-out** — with >1 device and `policy="replica"` (or
+  "auto"), coalesced batches are sharded row-wise over a device mesh via
+  make_replicated_search (index replicated, queries split): the
+  data-parallel dual of the shard-parallel distributed layer, bitwise
+  identical to local execution because replicas run the same query-local
+  pipeline with no collectives.
+
+Durability rides the engine snapshot: `save` stores the front-end config
+and every tenant bitmap as `extra`/`extra_arrays` alongside the index, and
+`open` restores a front-end serving the same tenants.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mutable import EpochLRU
+from repro.serve.api import (DEFAULT_DEADLINE_MS, SearchParams, SearchResult,
+                             _positive_int)
+from repro.serve.engine import AnnEngine
+
+
+class UnknownTenantError(KeyError):
+    """A request named a tenant never registered with the front-end."""
+
+
+class TenantFilterBank:
+    """Standing per-tenant filters over a mutable index (DESIGN.md §3.12).
+
+    A tenant is a named id-subset (e.g. one customer's vectors in a shared
+    index). `register` stores the subset as a host bool mask over point
+    ids; `get` returns the DEVICE uint8 bitmap (tenant ∧ alive) the jit
+    filter path consumes, served from an EpochLRU keyed on
+    (index alive-epoch, capacity width, tenant version):
+
+    - index mutation (add/remove) bumps `_alive_epoch` → every tenant's
+      cached bitmap is stale and rebuilds on next use (tombstoned ids
+      drop out of the tenant's serving set immediately);
+    - `register`/`extend` bump the tenant's own version → only that
+      tenant rebuilds;
+    - unchanged tenants hit the cache: steady-state per-request filter
+      cost is a dict lookup, zero host compose, zero upload.
+
+    `capacity` bounds device memory: at most that many tenant bitmaps
+    stay resident, LRU-evicted (an evicted tenant re-uploads on next
+    use — correctness is unaffected). The underlying EpochLRU is the same
+    cache class MutableIVF uses at capacity 1 for its standing
+    tombstone filter.
+    """
+
+    def __init__(self, index, capacity: int = 32):
+        self.index = index
+        self._cache = EpochLRU(capacity=_positive_int("capacity", capacity))
+        self._masks: dict = {}      # tenant -> host bool mask over ids
+        self._versions: dict = {}   # tenant -> int, bumped on (re)register
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ registry
+    def register(self, tenant: str, ids: Optional[Sequence[int]] = None,
+                 mask: Optional[np.ndarray] = None) -> None:
+        """(Re)define a tenant's id-set from an allowlist or a bool mask.
+        Replaces any previous definition and invalidates its cached
+        bitmap."""
+        if (ids is None) == (mask is None):
+            raise ValueError("register needs exactly one of ids= or mask=")
+        if mask is not None:
+            m = np.asarray(mask).astype(bool).ravel().copy()
+        else:
+            ii = np.asarray(ids, np.int64).ravel()
+            if ii.size and ii.min() < 0:
+                raise ValueError("tenant ids must be non-negative")
+            m = np.zeros(int(ii.max()) + 1 if ii.size else 0, bool)
+            m[ii] = True
+        with self._lock:
+            self._masks[tenant] = m
+            self._versions[tenant] = self._versions.get(tenant, 0) + 1
+            self._cache.drop(tenant)
+
+    def extend(self, tenant: str, ids: Sequence[int]) -> None:
+        """Grow a tenant's id-set (e.g. after `add` returned fresh ids for
+        that tenant's vectors)."""
+        ii = np.asarray(ids, np.int64).ravel()
+        with self._lock:
+            if tenant not in self._masks:
+                raise UnknownTenantError(tenant)
+            m = self._masks[tenant]
+            need = int(ii.max()) + 1 if ii.size else 0
+            if need > m.shape[0]:
+                m = np.concatenate([m, np.zeros(need - m.shape[0], bool)])
+            m[ii] = True
+            self._masks[tenant] = m
+            self._versions[tenant] += 1
+            self._cache.drop(tenant)
+
+    @property
+    def tenants(self):
+        with self._lock:
+            return sorted(self._masks)
+
+    @property
+    def fills(self) -> int:
+        """Device bitmap (re)builds so far — the observable for cache
+        efficiency tests (steady state: one fill per tenant per index
+        epoch)."""
+        return self._cache.fills
+
+    def __contains__(self, tenant) -> bool:
+        with self._lock:
+            return tenant in self._masks
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._masks)
+
+    # ------------------------------------------------------------- serving
+    def get(self, tenant: str) -> jax.Array:
+        """DEVICE uint8 bitmap (tenant ∧ alive) at capacity width, cached
+        per (alive-epoch, capacity, tenant-version)."""
+        with self._lock:
+            if tenant not in self._masks:
+                raise UnknownTenantError(tenant)
+            idx, m = self.index, self._masks[tenant]
+            epoch = (getattr(idx, "_alive_epoch", -1), idx.alive.shape[0],
+                     self._versions[tenant])
+            return self._cache.get(
+                tenant, epoch,
+                lambda: jnp.asarray(idx.filter_bitmap(mask=m)))
+
+    # ---------------------------------------------------------- durability
+    def state(self):
+        """(meta, arrays) for riding an engine snapshot."""
+        with self._lock:
+            meta = {"tenants": sorted(self._masks)}
+            arrays = {f"tenant.{t}": self._masks[t].astype(np.uint8)
+                      for t in self._masks}
+            return meta, arrays
+
+
+@dataclass
+class _Request:
+    """One queued front-end operation. kind: "search" | "add" | "remove"."""
+    kind: str
+    future: Future
+    Q: Optional[np.ndarray] = None
+    params: Optional[SearchParams] = None     # validated at submit
+    key: Optional[tuple] = None               # coalescing key (None = solo)
+    t_admit: float = 0.0                      # perf_counter at submit
+    flush_at: float = field(default=float("inf"))
+    payload: Optional[tuple] = None           # mutation args
+
+    @property
+    def nq(self) -> int:
+        return int(self.Q.shape[0]) if self.Q is not None else 0
+
+
+class ServingFrontend:
+    """Async serving loop in front of AnnEngine (DESIGN.md §3.12).
+
+    One dispatcher thread owns the engine: searches AND mutations flow
+    through its queue, so callers never take a lock around the mutable
+    index. Compatible searches (same SearchParams.batch_key) coalesce
+    into one padded jit call; mutations are strict barriers.
+
+    Flush policy: a pending group dispatches when
+
+    - its total queries reach `max_batch` (default: the engine's jit tile
+      `bq` — one full tile), or
+    - the oldest request in it has waited `min(max_delay_ms,
+      deadline_ms / 2)` — half the request's latency budget, clamped so a
+      generous deadline doesn't stall the queue (`max_delay_ms=None`
+      removes the clamp → pure half-deadline policy), or
+    - the front-end is closing / `flush()` was called.
+
+    `policy` selects execution: "local" always runs the single-device
+    engine path; "replica" shards each coalesced batch row-wise over all
+    visible devices via make_replicated_search (index replicated — the
+    query-bound regime's scaling axis); "auto" picks replica iff more
+    than one device is visible. Both paths are bitwise identical per
+    query, so the policy is purely a throughput decision.
+    """
+
+    def __init__(self, engine: AnnEngine, *,
+                 max_batch: Optional[int] = None,
+                 max_delay_ms: Optional[float] = 2.0,
+                 default_deadline_ms: float = DEFAULT_DEADLINE_MS,
+                 policy: str = "auto",
+                 tenant_capacity: int = 32):
+        if policy not in ("local", "replica", "auto"):
+            raise ValueError(f"policy must be local|replica|auto, "
+                             f"got {policy!r}")
+        self.engine = engine
+        self.max_batch = _positive_int(
+            "max_batch", max_batch if max_batch is not None else engine.bq)
+        if max_delay_ms is not None and not max_delay_ms > 0:
+            raise ValueError("max_delay_ms must be positive or None")
+        self.max_delay_ms = max_delay_ms
+        self.default_deadline_ms = float(default_deadline_ms)
+        self.policy = policy
+        self.tenants = TenantFilterBank(engine.index,
+                                        capacity=tenant_capacity)
+        self.stats = {"dispatches": 0, "coalesced": 0, "requests": 0,
+                      "mutations": 0, "replica_dispatches": 0}
+        self._q: deque = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._draining = False
+        self._rep_cache: dict = {}      # static-shape key -> jitted replica fn
+        self._mesh = None
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-frontend", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- clients
+    def submit(self, Q, params: Optional[SearchParams] = None) -> Future:
+        """Enqueue a search; returns a Future[SearchResult]. Validation
+        (param bounds + query hygiene) runs HERE, in the caller's thread —
+        a malformed request fails fast and never reaches the batcher."""
+        from repro.serve.api import validate_queries
+        p = (params or SearchParams()).validate(
+            default_top_t=self.engine.top_t,
+            default_rerank=self.engine.rerank_budget)
+        Q = validate_queries(Q, self.engine.index.centroids.shape[1],
+                             sanitize=p.sanitize)
+        if p.tenant is not None and p.tenant not in self.tenants:
+            raise UnknownTenantError(p.tenant)
+        fut: Future = Future()
+        now = time.perf_counter()
+        deadline = (p.deadline_ms if p.deadline_ms is not None
+                    else self.default_deadline_ms)
+        wait_ms = deadline / 2.0
+        if self.max_delay_ms is not None:
+            wait_ms = min(wait_ms, self.max_delay_ms)
+        req = _Request("search", fut, Q=Q, params=p, key=p.batch_key(),
+                       t_admit=now, flush_at=now + wait_ms * 1e-3)
+        self._enqueue(req)
+        return fut
+
+    def search(self, Q, params: Optional[SearchParams] = None,
+               **kw) -> SearchResult:
+        """Blocking search through the front-end loop. Legacy kwargs
+        (k=, top_t=, tenant=, deadline_ms=, ...) accepted as a
+        SearchParams shim."""
+        if kw:
+            if params is not None:
+                raise TypeError("pass params= or kwargs, not both")
+            params = SearchParams(**kw)
+        return self.submit(Q, params).result()
+
+    async def asearch(self, Q, params: Optional[SearchParams] = None
+                      ) -> SearchResult:
+        """Awaitable search for asyncio servers."""
+        import asyncio
+        return await asyncio.wrap_future(self.submit(Q, params))
+
+    def add(self, X, tenant: Optional[str] = None) -> np.ndarray:
+        """Mutation barrier: append points through the queue (after every
+        earlier search, before every later one). With `tenant`, the fresh
+        ids also extend that tenant's standing filter atomically with the
+        insert (no window where the points are live but unfindable by
+        their tenant)."""
+        fut: Future = Future()
+        self._enqueue(_Request("add", fut, payload=(X, tenant)))
+        return fut.result()
+
+    def remove(self, ids, hard: bool = True) -> int:
+        """Mutation barrier: tombstone points through the queue."""
+        fut: Future = Future()
+        self._enqueue(_Request("remove", fut, payload=(ids, hard)))
+        return fut.result()
+
+    def register_tenant(self, tenant: str,
+                        ids: Optional[Sequence[int]] = None,
+                        mask: Optional[np.ndarray] = None) -> None:
+        self.tenants.register(tenant, ids=ids, mask=mask)
+
+    def flush(self) -> None:
+        """Block until every currently queued request has dispatched
+        (pending deadline timers are overridden — the queue drains now)."""
+        with self._cond:
+            self._draining = True
+            self._cond.notify_all()
+            self._cond.wait_for(lambda: not self._q or self._closed)
+            self._draining = False
+
+    def close(self) -> None:
+        """Drain the queue, then stop the dispatcher. Idempotent."""
+        with self._cond:
+            if self._closed:
+                return
+            self._draining = True
+            self._cond.notify_all()
+            self._cond.wait_for(lambda: not self._q)
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join(timeout=10.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ---------------------------------------------------------- dispatcher
+    def _enqueue(self, req: _Request) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("front-end is closed")
+            self._q.append(req)
+            self._cond.notify_all()
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                group, timeout = self._collect()
+                if group is None:
+                    if self._closed and not self._q:
+                        return
+                    self._cond.wait(timeout=timeout)
+                    continue
+                if not self._q:
+                    self._cond.notify_all()   # wake flush()/close() waiters
+            try:
+                self._dispatch(group)
+            except BaseException as e:   # noqa: BLE001 — futures carry it
+                for r in group:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+            with self._cond:
+                if not self._q:
+                    self._cond.notify_all()
+
+    def _collect(self):
+        """With the lock held: pick the next dispatch group, or
+        (None, timeout) to sleep. Mutations dispatch only from the queue
+        head (strict barrier); searches group by coalescing key across the
+        pre-mutation prefix (searches at one epoch commute, so grouping
+        past a different-keyed search is safe — past a mutation is not)."""
+        q = self._q
+        if not q:
+            return None, None
+        head = q[0]
+        if head.kind != "search":
+            q.popleft()
+            return [head], None
+        pre = []                    # searches before the first mutation
+        for r in q:
+            if r.kind != "search":
+                break
+            pre.append(r)
+        groups: dict = {}
+        for r in pre:
+            groups.setdefault(r.key if r.key is not None else id(r),
+                              []).append(r)
+        now = time.perf_counter()
+        target = None
+        for g in groups.values():   # a full batch dispatches immediately
+            if sum(r.nq for r in g) >= self.max_batch:
+                target = g
+                break
+        if target is None:
+            ripe = ([min(pre, key=lambda r: r.flush_at)] if self._draining
+                    else [r for r in pre if now >= r.flush_at])
+            if not ripe:
+                return None, max(min(r.flush_at for r in pre) - now, 1e-4)
+            first = min(ripe, key=lambda r: r.flush_at)
+            target = groups[first.key if first.key is not None
+                            else id(first)]
+        chosen, total = [], 0
+        for r in target:            # cap the coalesced batch at max_batch:
+            if chosen and total + r.nq > self.max_batch:
+                break               # never overflow into a LARGER padding
+            chosen.append(r)        # bucket than solo serving would use
+            total += r.nq
+            if total >= self.max_batch:
+                break
+        taken = set(map(id, chosen))
+        self._q = deque(r for r in q if id(r) not in taken)
+        return chosen, None
+
+    def _dispatch(self, group) -> None:
+        req = group[0]
+        if req.kind == "add":
+            X, tenant = req.payload
+            ids = self.engine.add(X)
+            if tenant is not None:
+                if tenant in self.tenants:
+                    self.tenants.extend(tenant, ids)
+                else:
+                    self.tenants.register(tenant, ids=ids)
+            self.stats["mutations"] += 1
+            req.future.set_result(ids)
+            return
+        if req.kind == "remove":
+            ids, hard = req.payload
+            n = self.engine.remove(ids, hard=hard)
+            self.stats["mutations"] += 1
+            req.future.set_result(n)
+            return
+        self._dispatch_search(group)
+
+    def _dispatch_search(self, group) -> None:
+        p = group[0].params          # key-equal across the group
+        Qcat = (np.concatenate([r.Q for r in group])
+                if len(group) > 1 else group[0].Q)
+        filt_dev = (self.tenants.get(p.tenant)
+                    if p.tenant is not None else None)
+        t0 = time.perf_counter()
+        if self._use_replica(p):
+            ids, vals, escalated = self._replica_search(Qcat, p, filt_dev)
+            self.stats["replica_dispatches"] += 1
+        else:
+            r = self.engine.search_request(
+                Qcat, p, **({"_filter_dev": filt_dev}
+                            if filt_dev is not None else {}))
+            ids, vals, escalated = r.ids, r.scores, r.escalated
+        engine_us = (time.perf_counter() - t0) * 1e6
+        t_done = time.perf_counter()
+        epoch = getattr(self.engine.index, "_alive_epoch", -1)
+        self.stats["dispatches"] += 1
+        self.stats["requests"] += len(group)
+        self.stats["coalesced"] += len(group) - 1
+        total = int(ids.shape[0])
+        off = 0
+        for r in group:
+            sl = slice(off, off + r.nq)
+            off += r.nq
+            r.future.set_result(SearchResult(
+                ids[sl], vals[sl] if vals is not None else None,
+                engine_us=engine_us,
+                queued_us=(t_done - r.t_admit) * 1e6 - engine_us,
+                batch_size=total, escalated=escalated, epoch=epoch,
+                tenant=p.tenant, deadline_ms=r.params.deadline_ms))
+
+    # ------------------------------------------------------ replica fan-out
+    def _use_replica(self, p: SearchParams) -> bool:
+        if self.policy == "local":
+            return False
+        n_dev = len(jax.devices())
+        if self.policy == "replica" and n_dev < 2:
+            return False
+        if self.policy == "auto" and n_dev < 2:
+            return False
+        # inline host filters stay on the engine path (it owns their
+        # compose-and-upload); tenant filters are already device-resident
+        return not p.has_inline_filter
+
+    def _replica_search(self, Q: np.ndarray, p: SearchParams, filt_dev):
+        """Shard a coalesced batch row-wise over all devices. Mirrors the
+        engine path's filter/escalation plan exactly (serving_filter) so
+        results stay bitwise identical to local execution."""
+        from repro.core.router import clamp_top_t
+        from repro.core.search import pad_queries
+        if filt_dev is None:
+            filt, escalate = self.engine.index.serving_filter(
+                escalate=p.escalate)
+        else:
+            filt, escalate = filt_dev, p.escalate
+        devs = jax.devices()
+        R = len(devs)
+        top_t = clamp_top_t(p.top_t, self.engine.index.centroids.shape[0])
+        mult = 1 + max(self.engine.index.n_spills, 1)
+        key = (top_t, p.k, max(p.rerank_budget, p.k), mult,
+               bool(escalate), filt is not None, R)
+        fn = self._rep_cache.get(key)
+        if fn is None:
+            from jax.sharding import Mesh
+            from repro.core.distributed import make_replicated_search
+            if self._mesh is None:
+                self._mesh = Mesh(np.array(devs), ("r",))
+            fn = jax.jit(make_replicated_search(
+                self._mesh, ("r",), top_t=top_t, final_k=p.k,
+                rerank_budget=max(p.rerank_budget, p.k), multiplicity=mult,
+                with_filter=filt is not None, escalate=bool(escalate)))
+            self._rep_cache[key] = fn
+        Qp, nq, _ = pad_queries(Q, self.engine.bq, multiple=R)
+        packed = self.engine.index.pack()
+        args = (packed, jnp.asarray(Qp)) + ((filt,) if filt is not None
+                                            else ())
+        ids, vals = fn(*args)
+        return (np.asarray(ids)[:nq], np.asarray(vals)[:nq],
+                bool(escalate and filt is not None))
+
+    # ---------------------------------------------------------- durability
+    def save(self, path: str) -> None:
+        """Snapshot engine + front-end: the index snapshot carries the
+        batching config in its manifest and every tenant mask as an
+        `extra.` array (same atomicity/CRC guarantees)."""
+        self.flush()
+        tmeta, tarrays = self.tenants.state()
+        cfg = {"max_batch": self.max_batch,
+               "max_delay_ms": self.max_delay_ms,
+               "default_deadline_ms": self.default_deadline_ms,
+               "policy": self.policy,
+               "tenant_capacity": self.tenants._cache.capacity}
+        self.engine.save(path, extra={"frontend": cfg, **tmeta},
+                         extra_arrays=tarrays)
+
+    @classmethod
+    def open(cls, path: str, *, wal: bool = False, fsync: str = "always",
+             **overrides) -> "ServingFrontend":
+        """Reopen a saved front-end: engine snapshot (+ WAL replay) plus
+        the saved batching config and tenant registry. `overrides` replace
+        saved config fields (e.g. policy="local")."""
+        from repro.ckpt.index_store import load_extra_arrays, read_manifest
+        eng = AnnEngine.open(path, wal=wal, fsync=fsync)
+        ipath = os.path.join(path, "index")
+        extra = read_manifest(ipath)["meta"].get("extra", {})
+        cfg = dict(extra.get("frontend", {}))
+        cfg.update(overrides)
+        fe = cls(eng, **cfg)
+        arrays = load_extra_arrays(ipath)
+        for t in extra.get("tenants", []):
+            m = arrays.get(f"tenant.{t}")
+            if m is not None:
+                fe.tenants.register(t, mask=m.astype(bool))
+        return fe

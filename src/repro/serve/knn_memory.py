@@ -33,6 +33,8 @@ import numpy as np
 from repro.core.ivf import build_ivf
 from repro.core.mutable import MutableIVF, _grow_rows
 from repro.core.search import search_jit_batched, search_numpy
+from repro.serve.api import (DEFAULT_TOP_T, SearchParams, SearchResult,
+                             validate_queries)
 
 
 @dataclass
@@ -63,6 +65,10 @@ class KNNMemory:
     values: np.ndarray    # (>= n_total, hd) capacity buffer, see above
     engine: str = "numpy"
     segments: Optional[np.ndarray] = None   # (>= n_total,) i32 label per id
+    # probe budget when a retrieve passes none: the shared serving default
+    # (serve/api.py) — retrieve() historically hardcoded 4 against
+    # AnnEngine's 8, a silent quality divergence between the two edges
+    top_t: int = DEFAULT_TOP_T
 
     @classmethod
     def build(cls, keys: np.ndarray, values: np.ndarray,
@@ -130,27 +136,50 @@ class KNNMemory:
             out &= (seg == segment)
         return out
 
-    def retrieve(self, q: np.ndarray, k: int = 32, top_t: int = 4,
+    def retrieve(self, q: np.ndarray, k: int = 32,
+                 top_t: Optional[int] = None,
                  recency: Optional[int] = None,
                  segment: Optional[int] = None,
                  filter_mask: Optional[np.ndarray] = None,
                  escalate: bool = True):
         """q: (nq, hd) queries → (ids (nq,k), keys, values).
 
+        Thin shim over the unified request API (serve/api.py, DESIGN.md
+        §3.12): builds a SearchParams and routes through
+        `retrieve_request` — bitwise identical either way (pinned by
+        tests/test_serve_api.py). top_t=None resolves to `self.top_t`
+        (the shared serving default; the historical hardcoded 4 diverged
+        from AnnEngine's 8).
+
         recency: only attend over the last `recency` cached positions;
         segment: only over positions added with that segment label;
         filter_mask: arbitrary (n_total,)-prefix bitmap. Any combination;
         escalate=False skips the thin-window re-probe (search.py §3.9).
+        """
+        r, K, V = self.retrieve_request(q, SearchParams(
+            k=k, top_t=top_t, recency=recency, segment=segment,
+            filter_mask=filter_mask, escalate=escalate))
+        return r.ids, K, V
+
+    def retrieve_request(self, q: np.ndarray,
+                         params: Optional[SearchParams] = None):
+        """Structured retrieval: (SearchResult, keys, values).
 
         Hardened serving edge (DESIGN.md §3.11), same contract as
-        AnnEngine.search: k/top_t must be positive ints (an explicit
-        top_t=0 raises instead of silently retrieving nothing), queries
-        are dtype/shape/finiteness-checked, and nq=0 returns empties.
+        AnnEngine.search_request and the same shared validation path
+        (SearchParams.validate + validate_queries): k/top_t must be
+        positive ints (an explicit top_t=0 raises instead of silently
+        retrieving nothing), queries are dtype/shape/finiteness-checked.
+        `scores` on the result is None for the numpy engine (the host
+        path never computes final scores).
         """
-        from repro.serve.engine import _positive_int, validate_queries
-        k = _positive_int("k", k)
-        top_t = _positive_int("top_t", top_t)
-        q = validate_queries(q, self.index.centroids.shape[1])
+        p = (params or SearchParams()).validate(default_top_t=self.top_t)
+        k, top_t = p.k, p.top_t
+        recency, segment = p.recency, p.segment
+        filter_mask, escalate = p.filter_mask, p.escalate
+        q = validate_queries(q, self.index.centroids.shape[1],
+                             sanitize=p.sanitize)
+        vals = None
         if self.engine == "jit":
             from repro.core.search import pad_queries
             if (recency is None and segment is None and filter_mask is None):
@@ -163,12 +192,13 @@ class KNNMemory:
             # pad to the bucket before the jit boundary (a per-decode-step
             # ragged nq must not compile one executable per batch size)
             qp, nq, bq = pad_queries(q, 128)
-            jids, _ = search_jit_batched(
+            jids, jvals = search_jit_batched(
                 self.index.pack(), jnp.asarray(qp), top_t=top_t,
                 final_k=k, rerank_budget=max(4 * k, 64), bq=bq,
                 multiplicity=1 + max(self.index.n_spills, 1),
                 filter=f, escalate=escalate)
             ids = np.asarray(jids)[:nq]
+            vals = np.asarray(jvals)[:nq]
         else:
             filt = self._serving_filter(recency, segment, filter_mask)
             ids, _ = search_numpy(
@@ -177,7 +207,11 @@ class KNNMemory:
                              if filt is not None else None),
                 escalate=escalate)
         safe = np.maximum(ids, 0)
-        return ids, self.keys[safe], self.values[safe]
+        result = SearchResult(
+            ids, vals, batch_size=int(ids.shape[0]),
+            escalated=bool(escalate),
+            epoch=getattr(self.index, "_alive_epoch", -1))
+        return result, self.keys[safe], self.values[safe]
 
     # ---------------------------------------------------------- durability
     def save(self, path: str):
@@ -196,7 +230,8 @@ class KNNMemory:
         mem, _ = load_snapshot(path, expect_kind="KNNMemory")
         return mem
 
-    def attend(self, q: np.ndarray, k: int = 32, top_t: int = 4,
+    def attend(self, q: np.ndarray, k: int = 32,
+               top_t: Optional[int] = None,
                recency: Optional[int] = None, segment: Optional[int] = None,
                filter_mask: Optional[np.ndarray] = None,
                escalate: bool = True):
@@ -204,7 +239,8 @@ class KNNMemory:
 
         Returns (out (nq, hd), ids). Softmax over the retrieved set only —
         the memorizing-transformer approximation. Filter kwargs as in
-        `retrieve` (e.g. recency-window kNN attention).
+        `retrieve` (top_t=None → the shared serving default, see
+        `retrieve`), e.g. recency-window kNN attention.
         """
         ids, K, V = self.retrieve(q, k=k, top_t=top_t, recency=recency,
                                   segment=segment, filter_mask=filter_mask,

@@ -1,0 +1,332 @@
+"""Serving front-end (ISSUE 8 tentpole, DESIGN.md §3.12).
+
+Pins, per the acceptance criteria:
+
+1. Determinism: a request served inside a coalesced batch is BITWISE
+   identical to the same request served solo at the same index epoch —
+   under genuinely concurrent clients.
+2. No recompiles: coalescing reuses the engine's power-of-two padding
+   buckets, so batching across arbitrary arrival patterns adds ZERO jit
+   cache entries beyond the buckets solo serving already compiled.
+3. Deadline flushing: a partial batch dispatches once the oldest request
+   has spent half its deadline budget queued (and `max_delay_ms` clamps
+   that wait under generous deadlines).
+4. Tenant filters: standing per-tenant bitmaps are cached per index
+   epoch (one device upload per tenant per epoch), LRU-evicted at
+   capacity, and invalidated by mutation.
+5. Mutations are barriers: searches submitted before an enqueued
+   mutation serve the pre-mutation epoch, searches after it the
+   post-mutation epoch — observable via SearchResult.epoch.
+6. Durability: save/open round-trips the batching config and the tenant
+   registry alongside the engine snapshot.
+7. Replica fan-out (subprocess, 8 virtual devices): policy="replica"
+   shards coalesced batches across devices with bitwise-local results.
+"""
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.search import search_jit_batched
+from repro.data.vectors import make_manifold
+from repro.serve.api import SearchParams
+from repro.serve.engine import AnnEngine
+from repro.serve.frontend import (ServingFrontend, TenantFilterBank,
+                                  UnknownTenantError)
+
+N, D, NQ = 3_000, 24, 32
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_manifold(jax.random.PRNGKey(0), n=N, d=D, nq=NQ,
+                         intrinsic_dim=8)
+
+
+@pytest.fixture()
+def engine(ds):
+    return AnnEngine.build(jax.random.PRNGKey(1), ds.X, 16,
+                           spill_mode="soar", train_iters=5)
+
+
+# ------------------------------------------------------------- determinism
+def test_coalesced_equals_solo(ds, engine):
+    """Concurrent single-query clients coalesce into shared dispatches;
+    every client's rows are bitwise the solo engine answer."""
+    solo = {i: engine.search(ds.Q[i:i + 1], k=6) for i in range(NQ)}
+    with ServingFrontend(engine, policy="local",
+                         default_deadline_ms=200.0) as fe:
+        results = {}
+
+        def client(i):
+            results[i] = fe.search(ds.Q[i:i + 1], SearchParams(k=6))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(NQ)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = dict(fe.stats)
+    assert stats["requests"] == NQ
+    assert stats["dispatches"] < NQ          # coalescing actually happened
+    assert stats["coalesced"] == NQ - stats["dispatches"]
+    for i in range(NQ):
+        assert np.array_equal(results[i].ids, solo[i][0]), i
+        assert np.array_equal(results[i].scores, solo[i][1]), i
+        assert results[i].batch_size >= 1
+        assert results[i].queued_us >= 0.0
+
+
+def test_inline_filter_dispatches_solo(ds, engine):
+    mask = np.zeros(N, np.uint8)
+    mask[: N // 4] = 1
+    ref_ids, ref_sc = engine.search(ds.Q[:3], k=5, filter_mask=mask)
+    with ServingFrontend(engine, policy="local") as fe:
+        r = fe.search(ds.Q[:3], SearchParams(k=5, filter_mask=mask))
+        assert fe.stats["dispatches"] == 1 and r.batch_size == 3
+    assert np.array_equal(r.ids, ref_ids)
+    assert np.array_equal(r.scores, ref_sc)
+
+
+# ------------------------------------------------------------ no recompiles
+def test_no_recompilation_from_coalescing(ds, engine):
+    """Coalesced dispatch reuses the solo path's padding buckets: after
+    warming the buckets solo traffic uses, arbitrary concurrent batch
+    sizes through the front-end add no jit cache entries."""
+    for nq in (1, 9, 17):            # warm buckets 8, 16, 32
+        engine.search(ds.Q[:nq], k=6)
+    before = search_jit_batched._cache_size()
+    with ServingFrontend(engine, policy="local", max_batch=32,
+                         default_deadline_ms=100.0) as fe:
+        futs = []
+        for i in range(24):          # mixed sizes, concurrent arrival
+            nq = 1 + (i % 3)
+            futs.append(fe.submit(ds.Q[i % NQ:i % NQ + nq],
+                                  SearchParams(k=6)))
+        for f in futs:
+            f.result()
+    assert search_jit_batched._cache_size() == before
+
+
+# --------------------------------------------------------- deadline flushes
+def test_deadline_flushes_partial_batch(ds, engine):
+    """max_delay_ms=None → pure half-deadline policy: a partial batch
+    (3 ≪ max_batch) must dispatch once half the 80 ms budget is spent,
+    not wait for the batch to fill."""
+    with ServingFrontend(engine, policy="local", max_batch=64,
+                         max_delay_ms=None) as fe:
+        t0 = time.perf_counter()
+        futs = [fe.submit(ds.Q[i:i + 1],
+                          SearchParams(k=5, deadline_ms=80.0))
+                for i in range(3)]
+        res = [f.result(timeout=5.0) for f in futs]
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+    assert all(r.batch_size == 3 for r in res)   # one coalesced dispatch
+    assert fe.stats["dispatches"] == 1
+    # flushed by the deadline timer: waited at least ~half the budget
+    # (not dispatched instantly as a full batch) but well under the
+    # full deadline plus engine time
+    assert elapsed_ms < 5_000
+
+
+def test_max_delay_clamps_generous_deadlines(ds, engine):
+    """A 10 s deadline must NOT stall the queue 5 s — max_delay_ms caps
+    the batching wait."""
+    with ServingFrontend(engine, policy="local", max_batch=64,
+                         max_delay_ms=5.0) as fe:
+        t0 = time.perf_counter()
+        fe.search(ds.Q[:1], SearchParams(k=5, deadline_ms=10_000.0))
+        elapsed = time.perf_counter() - t0
+    assert elapsed < 3.0
+
+
+# ---------------------------------------------------------- tenant filters
+def test_tenant_filter_serving(ds, engine):
+    ids_t0 = np.flatnonzero(np.arange(N) % 3 == 0)
+    with ServingFrontend(engine, policy="local") as fe:
+        fe.register_tenant("t0", ids=ids_t0)
+        r = fe.search(ds.Q, SearchParams(k=6, tenant="t0"))
+        # tenant serving == engine-level subset filtering, bitwise
+        ref_ids, ref_sc = engine.search(ds.Q, k=6, filter_ids=ids_t0)
+        assert np.array_equal(r.ids, ref_ids)
+        assert np.array_equal(r.scores, ref_sc)
+        ok = r.ids[r.ids >= 0]
+        assert (ok % 3 == 0).all()
+        with pytest.raises(UnknownTenantError):
+            fe.search(ds.Q[:1], SearchParams(k=3, tenant="nope"))
+
+
+def test_tenant_lru_eviction_and_epoch_invalidation(ds, engine):
+    bank = TenantFilterBank(engine.index, capacity=2)
+    for t in ("a", "b", "c"):
+        bank.register(t, ids=np.arange(100))
+    bank.get("a"); bank.get("b")
+    assert bank.fills == 2
+    bank.get("a"); bank.get("b")               # steady state: cache hits
+    assert bank.fills == 2
+    bank.get("c")                              # fills + evicts "a" (LRU)
+    assert bank.fills == 3 and "a" not in bank._cache
+    bank.get("a")                              # re-upload after eviction
+    assert bank.fills == 4
+    engine.remove([0, 1], hard=False)          # mutation bumps the epoch
+    bank.get("a")                              # stale → rebuild
+    assert bank.fills == 5
+    assert int(np.asarray(bank.get("a"))[0]) == 0   # tombstone composed in
+    assert bank.fills == 5                     # second get in-epoch: hit
+    bank.extend("a", [200, 201])               # registry bump → rebuild
+    assert int(np.asarray(bank.get("a"))[200]) == 1
+    assert bank.fills == 6
+
+
+def test_tenant_coalescing_same_tenant_only(ds, engine):
+    """Same-tenant requests share a dispatch; different tenants never
+    share one (their filter bitmaps differ)."""
+    with ServingFrontend(engine, policy="local",
+                         default_deadline_ms=200.0) as fe:
+        fe.register_tenant("a", ids=np.arange(0, N, 2))
+        fe.register_tenant("b", ids=np.arange(1, N, 2))
+        futs = ([fe.submit(ds.Q[i:i + 1], SearchParams(k=4, tenant="a"))
+                 for i in range(4)]
+                + [fe.submit(ds.Q[i:i + 1], SearchParams(k=4, tenant="b"))
+                   for i in range(4)])
+        res = [f.result(timeout=10.0) for f in futs]
+    assert all(r.tenant == "a" for r in res[:4])
+    assert all(r.tenant == "b" for r in res[4:])
+    for r in res[:4]:
+        ok = r.ids[r.ids >= 0]
+        assert (ok % 2 == 0).all()
+    for r in res[4:]:
+        ok = r.ids[r.ids >= 0]
+        assert (ok % 2 == 1).all()
+    assert fe.stats["dispatches"] >= 2
+
+
+# ------------------------------------------------------- mutation barriers
+def test_mutation_is_a_barrier(ds, engine):
+    """Searches queued before a mutation serve the old epoch; searches
+    queued after it serve the new one — even when everything is enqueued
+    back-to-back before the dispatcher wakes."""
+    from concurrent.futures import Future
+    from repro.serve.frontend import _Request
+    with ServingFrontend(engine, policy="local", max_batch=64,
+                         max_delay_ms=None) as fe:
+        e0 = engine.index._alive_epoch
+        pre = [fe.submit(ds.Q[i:i + 1],
+                         SearchParams(k=5, deadline_ms=100.0))
+               for i in range(3)]
+        mfut: Future = Future()
+        fe._enqueue(_Request("remove", mfut,
+                             payload=(np.arange(N), False)))
+        post = [fe.submit(ds.Q[i:i + 1],
+                          SearchParams(k=5, deadline_ms=100.0))
+                for i in range(3)]
+        pre_r = [f.result(timeout=10.0) for f in pre]
+        assert mfut.result(timeout=10.0) == N
+        post_r = [f.result(timeout=10.0) for f in post]
+    for r in pre_r:                  # served before the tombstoning
+        assert r.epoch == e0
+        assert (r.ids >= 0).any()
+    for r in post_r:                 # served after: everything is dead
+        assert r.epoch > e0
+        assert (r.ids == -1).all()
+
+
+def test_add_with_tenant_is_atomic(ds, engine):
+    """add(tenant=...) extends the tenant's standing filter in the same
+    barrier as the insert: the fresh points are immediately findable
+    under their tenant, and only the allowed ids are ever served."""
+    rng = np.random.default_rng(7)
+    with ServingFrontend(engine, policy="local") as fe:
+        fe.register_tenant("t", ids=[0])
+        new = rng.normal(size=(5, D)).astype(np.float32)
+        ids = fe.add(new, tenant="t")
+        allowed = {0, *map(int, ids)}
+        r = fe.search(new, SearchParams(k=3, tenant="t"))
+        served = set(map(int, r.ids[r.ids >= 0]))
+        assert served and served <= allowed
+        # a brand-new tenant can be created by its first add, too
+        ids2 = fe.add(new, tenant="fresh")
+        r2 = fe.search(new, SearchParams(k=3, tenant="fresh"))
+        srv2 = set(map(int, r2.ids[r2.ids >= 0]))
+        assert srv2 and srv2 <= set(map(int, ids2))
+
+
+# -------------------------------------------------------------- durability
+def test_save_open_round_trip(tmp_path, ds, engine):
+    with ServingFrontend(engine, policy="local", max_batch=48,
+                         max_delay_ms=3.0,
+                         default_deadline_ms=77.0) as fe:
+        fe.register_tenant("acme", ids=np.arange(0, N, 5))
+        ref = fe.search(ds.Q, SearchParams(k=6, tenant="acme"))
+        fe.save(str(tmp_path / "snap"))
+    fe2 = ServingFrontend.open(str(tmp_path / "snap"))
+    try:
+        assert fe2.max_batch == 48 and fe2.max_delay_ms == 3.0
+        assert fe2.default_deadline_ms == 77.0
+        assert fe2.tenants.tenants == ["acme"]
+        r = fe2.search(ds.Q, SearchParams(k=6, tenant="acme"))
+        assert np.array_equal(r.ids, ref.ids)
+        assert np.array_equal(r.scores, ref.scores)
+    finally:
+        fe2.close()
+
+
+def test_close_rejects_new_work(ds, engine):
+    fe = ServingFrontend(engine, policy="local")
+    fe.search(ds.Q[:1], SearchParams(k=3))
+    fe.close()
+    fe.close()                                    # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        fe.submit(ds.Q[:1], SearchParams(k=3))
+
+
+# ----------------------------------------------------------- replica policy
+SCRIPT_REPLICA = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.data.vectors import make_manifold
+from repro.serve.api import SearchParams
+from repro.serve.engine import AnnEngine
+from repro.serve.frontend import ServingFrontend
+
+assert len(jax.devices()) == 8
+ds = make_manifold(jax.random.PRNGKey(0), n=3_000, d=24, nq=32,
+                   intrinsic_dim=8)
+eng = AnnEngine.build(jax.random.PRNGKey(1), ds.X, 16, train_iters=5)
+solo_ids, solo_sc = eng.search(ds.Q, k=6)
+
+fe = ServingFrontend(eng, policy="replica", default_deadline_ms=200.0)
+r = fe.search(ds.Q, SearchParams(k=6))
+assert fe.stats["replica_dispatches"] == 1
+assert np.array_equal(r.ids, solo_ids), "replica ids != local"
+assert np.array_equal(r.scores, solo_sc), "replica scores != local"
+
+# tenant filter under replica fan-out, still bitwise local
+fe.register_tenant("t", ids=np.arange(0, 3_000, 2))
+rt = fe.search(ds.Q, SearchParams(k=6, tenant="t"))
+ref_ids, ref_sc = eng.search(ds.Q, k=6, filter_ids=np.arange(0, 3_000, 2))
+assert np.array_equal(rt.ids, ref_ids)
+assert np.array_equal(rt.scores, ref_sc)
+
+# "auto" on 8 devices picks replica
+fe.policy = "auto"
+fe.search(ds.Q, SearchParams(k=6))
+assert fe.stats["replica_dispatches"] == 3
+fe.close()
+print("OK")
+"""
+
+
+def test_replica_policy_multidevice():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT_REPLICA], capture_output=True,
+        text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                        "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "OK" in r.stdout

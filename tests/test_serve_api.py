@@ -1,0 +1,246 @@
+"""Unified serving request API (ISSUE 8 satellites, DESIGN.md §3.12).
+
+Pins:
+
+1. Shim parity: the legacy kwarg signatures (`AnnEngine.search`,
+   `KNNMemory.retrieve`) are thin shims over SearchParams routing —
+   results are BITWISE identical to calling the structured entry points
+   directly, on both engines.
+2. Shared validation: k=0 / top_t=0 / bool / NaN queries raise the same
+   errors through every edge (one hardened path, SearchParams.validate);
+   sanitize=True zeroes non-finite queries instead.
+3. Default unification: KNNMemory's probe budget defaults to the same
+   DEFAULT_TOP_T as AnnEngine (it historically hardcoded top_t=4 against
+   the engine's 8), and the default round-trips through snapshots.
+4. Distributed plumbing: the search makers accept a SearchParams and
+   produce the same fn as the equivalent kwargs; replica fan-out on one
+   device is bitwise the local pipeline.
+5. Snapshot extras: caller-owned arrays ride a snapshot under `extra.`
+   names and load back exactly (the front-end's tenant-bitmap channel).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mutable import MutableIVF
+from repro.core.search import pad_queries, search_jit_batched
+from repro.data.vectors import make_manifold
+from repro.serve.api import (DEFAULT_TOP_T, SearchParams, SearchResult)
+from repro.serve.engine import AnnEngine
+from repro.serve.knn_memory import KNNMemory
+
+N, D, NQ = 3_000, 24, 16
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_manifold(jax.random.PRNGKey(0), n=N, d=D, nq=NQ,
+                         intrinsic_dim=8)
+
+
+@pytest.fixture(scope="module")
+def engine(ds):
+    return AnnEngine.build(jax.random.PRNGKey(1), ds.X, 16,
+                           spill_mode="soar", train_iters=5)
+
+
+@pytest.fixture(scope="module", params=["numpy", "jit"])
+def memory(request, ds):
+    rng = np.random.default_rng(0)
+    V = rng.normal(size=(N, D)).astype(np.float32)
+    return KNNMemory.build(ds.X, V, n_partitions=16, engine=request.param)
+
+
+# ------------------------------------------------------------- shim parity
+def test_engine_shim_parity(ds, engine):
+    """search(kwargs) ≡ search_request(SearchParams) — bitwise."""
+    ids_a, sc_a = engine.search(ds.Q, k=7, top_t=6, escalate=False)
+    r = engine.search_request(ds.Q, SearchParams(k=7, top_t=6,
+                                                 escalate=False))
+    assert np.array_equal(ids_a, r.ids)
+    assert np.array_equal(sc_a, r.scores)
+    # structured result also unpacks like the legacy tuple
+    ids_b, sc_b = r
+    assert ids_b is r.ids and sc_b is r.scores
+    assert r.batch_size == NQ and r.epoch == engine.index._alive_epoch
+
+
+def test_engine_shim_parity_filtered(ds, engine):
+    mask = np.zeros(N, np.uint8)
+    mask[: N // 3] = 1
+    ids_a, sc_a = engine.search(ds.Q, k=5, filter_mask=mask)
+    r = engine.search_request(ds.Q, SearchParams(k=5, filter_mask=mask))
+    assert np.array_equal(ids_a, r.ids)
+    assert np.array_equal(sc_a, r.scores)
+    assert (r.ids < N // 3).all()
+
+
+def test_memory_shim_parity(memory):
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(5, D)).astype(np.float32)
+    ids_a, K_a, V_a = memory.retrieve(q, k=9, top_t=5, recency=1000)
+    r, K_b, V_b = memory.retrieve_request(
+        q, SearchParams(k=9, top_t=5, recency=1000))
+    assert np.array_equal(ids_a, r.ids)
+    assert np.array_equal(K_a, K_b) and np.array_equal(V_a, V_b)
+
+
+# -------------------------------------------------------- shared validation
+def test_validation_is_shared(ds, engine, memory):
+    q = ds.Q[:2]
+    for call in (lambda **kw: engine.search(q, **kw),
+                 lambda **kw: memory.retrieve(q, **kw)):
+        with pytest.raises(ValueError):
+            call(k=0)
+        with pytest.raises(ValueError):
+            call(top_t=0)          # explicit 0 raises, never falls back
+        with pytest.raises(ValueError):
+            call(k=True)
+    bad = q.copy()
+    bad[0, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        engine.search(bad, k=3)
+    with pytest.raises(ValueError, match="non-finite"):
+        memory.retrieve(bad, k=3)
+    # sanitize zeroes instead — equivalent to searching the zeroed batch
+    fixed = bad.copy()
+    fixed[0, 0] = 0.0
+    r = engine.search_request(bad, SearchParams(k=3, sanitize=True))
+    ids_ref, _ = engine.search(fixed, k=3)
+    assert np.array_equal(r.ids, ids_ref)
+
+
+def test_params_validate_bounds():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        SearchParams(deadline_ms=0).validate()
+    with pytest.raises(ValueError, match="deadline_ms"):
+        SearchParams(deadline_ms=float("nan")).validate()
+    with pytest.raises(ValueError, match="recency"):
+        SearchParams(recency=-1).validate()
+    p = SearchParams(top_t=None).validate(default_top_t=11)
+    assert p.top_t == 11 and p.k == 10
+    # frozen: validate returns a resolved copy, original untouched
+    p0 = SearchParams()
+    p0.validate(default_top_t=5)
+    assert p0.top_t is None
+
+
+def test_batch_key_semantics():
+    assert (SearchParams(k=5, tenant="a").validate(default_top_t=8)
+            .batch_key() == (5, 8, None, True, "a"))
+    # ad-hoc inline filters never coalesce
+    assert SearchParams(filter_mask=np.ones(4)).batch_key() is None
+    assert SearchParams(filter_ids=[1]).batch_key() is None
+    assert SearchParams(recency=10).batch_key() is None
+    assert SearchParams(segment=0).batch_key() is None
+
+
+# ------------------------------------------------------ default unification
+def test_default_top_t_unified(memory):
+    """KNNMemory's default probe budget is THE serving default — the same
+    constant AnnEngine uses — not a private hardcoded 4."""
+    assert memory.top_t == DEFAULT_TOP_T
+    assert AnnEngine(memory.index).top_t == DEFAULT_TOP_T
+    rng = np.random.default_rng(4)
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    ids_default, _, _ = memory.retrieve(q, k=6)
+    ids_explicit, _, _ = memory.retrieve(q, k=6, top_t=DEFAULT_TOP_T)
+    assert np.array_equal(ids_default, ids_explicit)
+
+
+def test_memory_top_t_round_trips(tmp_path, ds):
+    rng = np.random.default_rng(5)
+    V = rng.normal(size=(N, D)).astype(np.float32)
+    mem = KNNMemory.build(ds.X, V, n_partitions=16, engine="numpy")
+    mem.top_t = 13
+    mem.save(str(tmp_path / "mem"))
+    back = KNNMemory.open(str(tmp_path / "mem"))
+    assert back.top_t == 13
+    q = rng.normal(size=(3, D)).astype(np.float32)
+    a, _, _ = mem.retrieve(q, k=5)
+    b, _, _ = back.retrieve(q, k=5)
+    assert np.array_equal(a, b)
+
+
+# ----------------------------------------------------- distributed plumbing
+def test_distributed_makers_take_params(ds, engine):
+    from repro.core.distributed import make_replicated_search
+    mesh = jax.make_mesh((1,), ("r",))
+    packed = engine.index.pack()
+    mult = 1 + max(engine.index.n_spills, 1)
+    kw = dict(final_k=6, rerank_budget=128, multiplicity=mult)
+    f_kwargs = make_replicated_search(mesh, ("r",), top_t=5, **kw)
+    f_params = make_replicated_search(
+        mesh, ("r",), top_t=99,  # overridden by params
+        params=SearchParams(k=6, top_t=5, rerank_budget=128), **kw)
+    Qp, nq, bq = pad_queries(ds.Q, 128)
+    ref = search_jit_batched(packed, jnp.asarray(Qp), top_t=5, final_k=6,
+                             rerank_budget=128, bq=bq, multiplicity=mult)
+    for f in (f_kwargs, f_params):
+        ids, sc = jax.jit(f)(packed, jnp.asarray(Qp))
+        # one-replica fan-out IS the local pipeline, bitwise
+        assert np.array_equal(np.asarray(ids)[:nq], np.asarray(ref[0])[:nq])
+        assert np.array_equal(np.asarray(sc)[:nq], np.asarray(ref[1])[:nq])
+
+
+def test_shard_parallel_maker_takes_params(ds):
+    from repro.core.distributed import build_sharded_ivf, \
+        make_distributed_search
+    mesh = jax.make_mesh((1,), ("data",))
+    sharded = build_sharded_ivf(jax.random.PRNGKey(2), ds.X, n_shards=1,
+                                n_partitions=16, train_iters=4)
+    f_kw = make_distributed_search(mesh, ("data",), top_t=6, final_k=5)
+    f_p = make_distributed_search(mesh, ("data",), top_t=1,
+                                  params=SearchParams(k=5, top_t=6))
+    ids_a, _ = jax.jit(f_kw)(sharded, jnp.asarray(ds.Q))
+    ids_b, _ = jax.jit(f_p)(sharded, jnp.asarray(ds.Q))
+    assert np.array_equal(np.asarray(ids_a), np.asarray(ids_b))
+
+
+# --------------------------------------------------------- snapshot extras
+def test_extra_arrays_round_trip(tmp_path, ds):
+    from repro.ckpt.index_store import (load_extra_arrays, load_snapshot,
+                                        save_snapshot)
+    idx = MutableIVF.build(jax.random.PRNGKey(3), ds.X[:500], 8,
+                           train_iters=3)
+    extras = {"tenant.acme": (np.arange(500) % 3 == 0).astype(np.uint8),
+              "tenant.b": np.ones(500, np.uint8)}
+    save_snapshot(str(tmp_path / "s"), idx, extra={"frontend": {"x": 1}},
+                  extra_arrays=extras)
+    back = load_extra_arrays(str(tmp_path / "s"))
+    assert sorted(back) == sorted(extras)
+    for k in extras:
+        assert np.array_equal(back[k], extras[k])
+    # extras are invisible to the normal object load path
+    obj, extra = load_snapshot(str(tmp_path / "s"),
+                               expect_kind="MutableIVF")
+    assert extra["frontend"] == {"x": 1}
+    assert obj.n_total == 500
+
+
+def test_extra_arrays_persist_through_engine_save(tmp_path, ds):
+    """The AnnEngine.save seam the front-end rides: extras land in the
+    SAME atomic snapshot and reload from it."""
+    from repro.ckpt.index_store import load_extra_arrays
+    eng = AnnEngine.build(jax.random.PRNGKey(4), ds.X[:500], 8,
+                          train_iters=3)
+    bm = (np.arange(500) % 2).astype(np.uint8)
+    eng.save(str(tmp_path / "e"), extra={"frontend": {"max_batch": 32}},
+             extra_arrays={"tenant.t0": bm})
+    back = load_extra_arrays(str(tmp_path / "e" / "index"))
+    assert np.array_equal(back["tenant.t0"], bm)
+    reopened = AnnEngine.open(str(tmp_path / "e"))
+    assert reopened.index.n_total == 500
+
+
+def test_search_result_metadata(ds, engine):
+    r = engine.search_request(ds.Q[:3],
+                              SearchParams(k=4, deadline_ms=1000.0))
+    assert isinstance(r, SearchResult)
+    assert r.nq == 3 and r.k == 4
+    assert r.engine_us > 0 and r.queued_us == 0.0
+    assert r.deadline_met() is True
+    assert r.total_us == r.engine_us
+    r0 = engine.search_request(np.empty((0, D), np.float32))
+    assert r0.nq == 0 and r0.ids.shape == (0, 10)
