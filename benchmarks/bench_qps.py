@@ -27,7 +27,21 @@ are a proxy; the frontend-vs-direct ratios are the portable signal. A
 fixed-shape GEMM calibration row (`qps_calib_gemm_*`) lets the CI gate
 normalize across machines.
 
-    PYTHONPATH=src python -m benchmarks.bench_qps [--smoke] [--out PATH]
+**Overload scenario** (`--overload`, ISSUE 9 / DESIGN.md §3.13): instead
+of the direct-vs-frontend comparison, measure serving under admission
+control. Phase 1 establishes goodput capacity (8 closed-loop clients,
+explicit `deadline_ms=SLO`); phase 2 offers ≥4x that rate open-loop at a
+bounded queue (`max_queue`, shed-oldest) and reports
+``goodput_ratio`` (overload goodput / capacity goodput — the load-
+shedding acceptance metric, asserted >= 0.8 inline), ``shed_rate``, and
+the p99 of ADMITTED requests (the row value — deadline enforcement must
+keep it bounded even at 4x offered load). Every Future is awaited: a
+hung Future fails the run. The resilience counters
+(shed/expired/retries/degraded) are also appended to the regular
+frontend rows, so BENCH_qps.json records them per run.
+
+    PYTHONPATH=src python -m benchmarks.bench_qps [--smoke] [--overload]
+        [--out PATH]
 """
 from __future__ import annotations
 
@@ -42,7 +56,8 @@ import numpy as np
 from benchmarks.common import Timer, emit
 from repro.core import true_neighbors
 from repro.data.vectors import glove_like
-from repro.serve.api import SearchParams
+from repro.serve.api import (DeadlineExceededError, OverloadedError,
+                             SearchParams, ServingError)
 from repro.serve.engine import AnnEngine
 from repro.serve.frontend import ServingFrontend
 
@@ -186,9 +201,19 @@ def run(n: int, c: int, nq: int, train_iters: int, reps: int, label: str,
         assert np.array_equal(got, ref), "coalesced != solo (determinism)"
         fe.search(ds.Q[:1], SearchParams(k=K, tenant="t"))   # warm tenant
 
+        # best-effort traffic (no explicit deadline): pacing comes from
+        # default_deadline_ms, and the comparison with direct stays
+        # apples-to-apples (nothing shed). Enforcement is exercised by
+        # the --overload scenario. ServingError is counted, not raised —
+        # a shed request must not kill a bench client thread.
+        errs = [0]
+
         def fe_search(q, tenant, fe=fe):
-            fe.search(q, SearchParams(
-                k=K, tenant="t" if tenant else None, deadline_ms=SLO_MS))
+            try:
+                fe.search(q, SearchParams(
+                    k=K, tenant="t" if tenant else None))
+            except ServingError:
+                errs[0] += 1
 
         def fe_mutate(j, fe=fe):
             if j % 4 == 3:
@@ -204,7 +229,10 @@ def run(n: int, c: int, nq: int, train_iters: int, reps: int, label: str,
         qps_f, good_f, p99_f = _report(
             f"qps_frontend_c{n_clients}_{label}", lat_f, wall_f,
             f" clients={n_clients} gain={gain:.2f}x "
-            f"coalesced={stats['coalesced']}/{stats['requests']}")
+            f"coalesced={stats['coalesced']}/{stats['requests']} "
+            f"shed={stats['shed']} expired={stats['expired']} "
+            f"retries={stats['retries']} degraded={stats['degraded']} "
+            f"errs={errs[0]}")
         if n_clients >= 8:
             # ISSUE 8 acceptance: batching beats direct dispatch at >=8
             # concurrent clients WITHOUT giving up tail latency
@@ -221,10 +249,160 @@ def run(n: int, c: int, nq: int, train_iters: int, reps: int, label: str,
          "per-phase samples)")
 
 
-def main(smoke: bool = False, out: str = ""):
+def run_overload(n: int, c: int, nq: int, train_iters: int, label: str,
+                 n_clients: int = 8, reps_base: int = 40,
+                 reps_over: int = 80, factor: float = 4.0):
+    """Serving under admission control (ISSUE 9, DESIGN.md §3.13)."""
+    ds = glove_like(n=n, d=100, nq=nq)
+    eng = AnnEngine.build(jax.random.PRNGKey(0), ds.X, c,
+                          spill_mode="soar", pq_subspaces=25,
+                          top_t=max(6, round(c / 200)), rerank_budget=300,
+                          train_iters=train_iters)
+    A = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2048, 256)), jnp.float32)
+    B = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (256, 2048)), jnp.float32)
+    calib = [_best_of(lambda: A @ B)]
+    Q = ds.Q
+
+    def warm(fe):
+        for s in (1, 2, 4, 8):       # every bucket coalescing can hit
+            fe.search(Q[:s], SearchParams(k=K))
+
+    # ---- phase 1: goodput capacity (closed loop, explicit SLO deadline)
+    fe = ServingFrontend(eng, policy="local", max_batch=n_clients,
+                         default_deadline_ms=SLO_MS)
+    warm(fe)
+    lat_ok = [[] for _ in range(n_clients)]
+    miss = [0] * n_clients
+
+    def closed_client(cid):
+        for i in range(reps_base):
+            q = Q[(cid * reps_base + i) % nq][None]
+            t0 = time.perf_counter()
+            try:
+                fe.search(q, SearchParams(k=K, deadline_ms=SLO_MS))
+            except ServingError:
+                miss[cid] += 1
+                continue
+            lat_ok[cid].append((time.perf_counter() - t0) * 1e6)
+
+    threads = [threading.Thread(target=closed_client, args=(cid,))
+               for cid in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall_base = time.perf_counter() - t0
+    fe.close()
+    base = np.concatenate([np.asarray(x) for x in lat_ok])
+    assert base.size, "capacity phase served nothing"
+    good_base = int((base <= SLO_MS * 1e3).sum()) / wall_base
+    qps_base = (base.size + sum(miss)) / wall_base
+    p99_base = float(np.percentile(base, 99))
+    emit(f"qps_overload_base_{label}", p99_base,
+         f"goodput={good_base:.0f}/s qps={qps_base:.0f} "
+         f"clients={n_clients} closed-loop deadline={SLO_MS:.0f}ms "
+         f"missed={sum(miss)} (value = p99 us)")
+
+    # ---- phase 2: open loop at `factor` x capacity, bounded queue.
+    # Size the queue so its drain time at measured capacity stays under
+    # HALF the SLO — admission control only preserves goodput if what it
+    # admits can still finish inside the budget (queue delay + one
+    # dispatch < SLO). An oversized queue admits requests that complete
+    # successfully but too late to count.
+    max_queue = max(n_clients,
+                    min(4 * n_clients,
+                        int(qps_base * SLO_MS * 1e-3 / 2)))
+    fe = ServingFrontend(eng, policy="local", max_batch=n_clients,
+                         default_deadline_ms=SLO_MS,
+                         max_queue=max_queue, overload="shed-oldest")
+    warm(fe)
+    offered_qps = factor * max(qps_base, 1.0)
+    interval = n_clients / offered_qps      # per-thread inter-arrival
+    done: list = []                         # list.append is GIL-atomic
+    rejected = [0] * n_clients
+
+    def open_client(cid):
+        next_at = time.perf_counter()
+        for i in range(reps_over):
+            now = time.perf_counter()
+            if now < next_at:
+                time.sleep(next_at - now)
+            next_at += interval
+            t0 = time.perf_counter()
+            try:
+                f = fe.submit(Q[(cid * reps_over + i) % nq][None],
+                              SearchParams(k=K, deadline_ms=SLO_MS))
+            except OverloadedError:
+                rejected[cid] += 1
+                continue
+            # stamp completion at callback time, not at join time
+            f.add_done_callback(lambda fut, t0=t0: done.append(
+                (t0, time.perf_counter(), fut)))
+
+    threads = [threading.Thread(target=open_client, args=(cid,))
+               for cid in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fe.flush()
+    wall_over = time.perf_counter() - t0
+    stats = dict(fe.stats)
+    fe.close()
+
+    adm, n_shed, n_exp = [], 0, 0
+    for ts, td, fut in done:
+        exc = fut.exception(timeout=60)     # zero hung Futures, enforced
+        if exc is None:
+            adm.append((td - ts) * 1e6)
+        elif isinstance(exc, OverloadedError):
+            n_shed += 1
+        elif isinstance(exc, DeadlineExceededError):
+            n_exp += 1
+        else:
+            raise AssertionError(f"unexpected failure: {exc!r}")
+    adm = np.asarray(adm)
+    n_rej = sum(rejected)
+    offered = len(done) + n_rej
+    assert offered == n_clients * reps_over, "lost track of a request"
+    good_over = (int((adm <= SLO_MS * 1e3).sum()) / wall_over
+                 if adm.size else 0.0)
+    ratio = good_over / max(good_base, 1e-9)
+    shed_rate = (n_shed + n_exp + n_rej) / max(offered, 1)
+    p99_adm = float(np.percentile(adm, 99)) if adm.size else 0.0
+    emit(f"qps_overload_{factor:.0f}x_{label}", p99_adm,
+         f"goodput_ratio={ratio:.2f} shed_rate={shed_rate:.2f} "
+         f"goodput={good_over:.0f}/s offered={offered / wall_over:.0f}/s "
+         f"ok={adm.size} shed={n_shed} expired={n_exp} rejected={n_rej} "
+         f"retries={stats['retries']} degraded={stats['degraded']} "
+         f"(value = p99 of admitted, us)")
+    # ISSUE 9 acceptance: shedding keeps goodput near capacity and
+    # deadline enforcement keeps the admitted tail bounded
+    assert ratio >= 0.8, (
+        f"overload goodput {good_over:.0f}/s < 0.8x capacity "
+        f"{good_base:.0f}/s (ratio {ratio:.2f})")
+    assert p99_adm <= 4 * SLO_MS * 1e3, (
+        f"admitted p99 {p99_adm:.0f}us unbounded under overload")
+    calib.append(_best_of(lambda: A @ B))
+    emit(f"qps_calib_gemm_overload_{label}", sorted(calib)[len(calib) // 2],
+         "2048x256x2048 f32 GEMM (gate normalization row)")
+
+
+def main(smoke: bool = False, overload: bool = False, out: str = ""):
     from benchmarks import common
     mark = len(common.ROWS)
-    if smoke:
+    if overload:
+        if smoke:
+            run_overload(n=10_000, c=64, nq=160, train_iters=3,
+                         label="smoke")
+        else:
+            run_overload(n=100_000, c=500, nq=400, train_iters=8,
+                         label="100k", reps_base=80, reps_over=160)
+    elif smoke:
         run(n=10_000, c=64, nq=160, train_iters=3, reps=20, label="smoke")
     else:
         run(n=100_000, c=500, nq=400, train_iters=8, reps=50,
@@ -239,6 +417,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down shape (n=10k)")
+    ap.add_argument("--overload", action="store_true",
+                    help="run the admission-control overload scenario "
+                         "instead of the direct-vs-frontend comparison")
     ap.add_argument("--out", default="",
                     help="standalone JSON artifact path")
     main(**vars(ap.parse_args()))

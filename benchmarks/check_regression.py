@@ -14,7 +14,13 @@ Compares a freshly generated bench artifact (rows of
   rows), all latencies are divided by it first, so the committed baseline
   transfers across machines of different speeds;
 - **coverage**: a baseline row missing from the current run fails — a
-  bench silently dropping a measurement must not pass the gate.
+  bench silently dropping a measurement must not pass the gate;
+- **serving resilience** (ISSUE 9): any ``goodput_ratio=X`` in a row's
+  derived string (the overload scenario of bench_qps — overload goodput
+  over no-overload capacity) may not drop more than ``--goodput-tol``
+  below baseline, and ``shed_rate=X`` may not rise more than
+  ``--shed-tol`` above it. Both are dimensionless ratios, so they gate
+  WITHOUT machine-speed normalization.
 
 Exit code 1 on any failure. Regenerate baselines intentionally with:
 
@@ -31,6 +37,8 @@ import re
 import sys
 
 RECALL_RE = re.compile(r"recall@10=([0-9.]+)")
+GOODPUT_RE = re.compile(r"goodput_ratio=([0-9.]+)")
+SHED_RE = re.compile(r"shed_rate=([0-9.]+)")
 
 
 def _load_rows(path: str) -> dict:
@@ -44,9 +52,15 @@ def _recall_of(row) -> float | None:
     return float(m.group(1)) if m else None
 
 
+def _derived_of(row, rx: re.Pattern) -> float | None:
+    m = rx.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
 def check(current: dict, baseline: dict, *, latency_tol: float,
           recall_tol: float, normalize_by: str | None,
-          min_us: float = 0.0):
+          min_us: float = 0.0, goodput_tol: float = 0.15,
+          shed_tol: float = 0.20):
     failures, notes = [], []
     scale = 1.0
     if normalize_by:
@@ -77,6 +91,30 @@ def check(current: dict, baseline: dict, *, latency_tol: float,
             else:
                 notes.append(f"{name}: recall@10 {c_rec:.4f} "
                              f"(baseline {b_rec:.4f}) ok")
+        b_gp = _derived_of(brow, GOODPUT_RE)
+        if b_gp is not None:
+            c_gp = _derived_of(crow, GOODPUT_RE)
+            if c_gp is None:
+                failures.append(f"{name}: baseline has goodput_ratio but "
+                                f"current row does not")
+            elif c_gp < b_gp - goodput_tol:
+                failures.append(f"{name}: goodput_ratio {c_gp:.2f} < "
+                                f"baseline {b_gp:.2f} - {goodput_tol}")
+            else:
+                notes.append(f"{name}: goodput_ratio {c_gp:.2f} "
+                             f"(baseline {b_gp:.2f}) ok")
+        b_sr = _derived_of(brow, SHED_RE)
+        if b_sr is not None:
+            c_sr = _derived_of(crow, SHED_RE)
+            if c_sr is None:
+                failures.append(f"{name}: baseline has shed_rate but "
+                                f"current row does not")
+            elif c_sr > b_sr + shed_tol:
+                failures.append(f"{name}: shed_rate {c_sr:.2f} > baseline "
+                                f"{b_sr:.2f} + {shed_tol}")
+            else:
+                notes.append(f"{name}: shed_rate {c_sr:.2f} "
+                             f"(baseline {b_sr:.2f}) ok")
         if name == normalize_by:
             continue
         b_us, c_us = brow["us_per_call"], crow["us_per_call"]
@@ -118,11 +156,16 @@ def main() -> int:
                     help="skip latency gating (not coverage) for rows "
                          "under this many µs in either run (current "
                          "value machine-scale normalized first)")
+    ap.add_argument("--goodput-tol", type=float, default=0.15,
+                    help="max allowed goodput_ratio drop vs baseline")
+    ap.add_argument("--shed-tol", type=float, default=0.20,
+                    help="max allowed shed_rate rise vs baseline")
     args = ap.parse_args()
     failures, notes = check(
         _load_rows(args.current), _load_rows(args.baseline),
         latency_tol=args.latency_tol, recall_tol=args.recall_tol,
-        normalize_by=args.normalize_by, min_us=args.min_us)
+        normalize_by=args.normalize_by, min_us=args.min_us,
+        goodput_tol=args.goodput_tol, shed_tol=args.shed_tol)
     for n in notes:
         print(f"  ok: {n}")
     if failures:

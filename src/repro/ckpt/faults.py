@@ -1,164 +1,16 @@
-"""Deterministic fault injection for the durable-index write paths
-(DESIGN.md §3.11).
+"""Compat shim (DESIGN.md §3.13): the fault-injection seam started life
+here as the durable-storage crash injector (PR 7); ISSUE 9 generalized
+it with serving-side points (engine-raise, latency spikes, shard/replica
+failures) and promoted it to ``repro.faults`` so the serving tier can
+depend on it without reaching into ``ckpt``. All state lives in
+``repro.faults`` — importing through this path shares the same installed
+plans."""
+from repro.faults import (FaultPlan, InjectedCrash, InjectedFault,
+                          InjectedTransientFault, active, crash_point,
+                          flip_byte, inject, install, serve_point,
+                          truncate_tail, uninstall, write)
 
-A durability layer is only as trustworthy as its crash matrix: every claim
-of the form "a crash during X leaves a recoverable state" needs a test
-that actually dies at X. This module is the single injection seam the
-snapshot writer (index_store.py), the WAL appender (wal.py), and the
-checkpoint commit (checkpoint.py) thread their writes and commit steps
-through, so the recovery test suite (tests/test_durability.py) can
-deterministically kill the process — or raise, for the fast in-process
-matrix — at any byte offset of any file or at any named protocol step.
-
-Two kinds of injection point:
-
-- **byte-budget streams** — ``write(f, data, stream=NAME)``: when the
-  installed plan targets ``NAME`` with a byte budget, exactly that many
-  bytes of the stream are written (flushed + fsynced, so the on-disk
-  prefix is what a real crash at that point would leave) and then the
-  process dies. Stream names used by the writers:
-  ``snapshot:arrays``, ``snapshot:manifest``, ``wal:append``.
-- **named crash points** — ``crash_point(NAME)``: dies at the Nth hit of
-  a protocol step. Points used: ``commit:between_renames``,
-  ``commit:before_cleanup``, ``wal:record`` (after a full record is
-  durable, before control returns).
-
-Plan grammar (``install(spec)`` or env ``REPRO_FAULT`` for subprocesses):
-
-    "snapshot:arrays+4096"        die after 4096 bytes of that stream
-    "wal:append+100"              die after 100 bytes of a WAL append
-    "commit:between_renames"      die at the 1st hit of that point
-    "wal:record@3"                die at the 3rd hit
-
-``REPRO_FAULT_MODE`` / ``mode=``: ``"raise"`` (default — raise
-``InjectedCrash``, a BaseException so library ``except Exception``
-blocks cannot swallow it) or ``"exit"`` (``os._exit``, a true crash: no
-atexit handlers, no buffered-file flushes beyond what the writer already
-forced).
-
-Also home to the **corruption injectors** (``flip_byte``,
-``truncate_tail``) the load-path tests use to assert that a damaged
-snapshot or WAL surfaces ``CorruptSnapshotError`` instead of garbage
-results.
-
-Zero overhead when no plan is installed: the hot-path checks are a single
-``is None`` test.
-"""
-from __future__ import annotations
-
-import os
-from dataclasses import dataclass, field
-from typing import Optional
-
-
-class InjectedCrash(BaseException):
-    """Raised (mode="raise") at an injected crash point. BaseException on
-    purpose: recovery code under test must never be able to catch this as
-    an ordinary error and "handle" the crash away."""
-
-
-@dataclass
-class FaultPlan:
-    point: str                      # stream or crash-point name
-    after_bytes: int = -1           # >=0: byte budget for a stream target
-    hits: int = 1                   # Nth hit of a named point
-    mode: str = "raise"             # "raise" | "exit"
-    _written: int = field(default=0, repr=False)
-    _hit_count: int = field(default=0, repr=False)
-
-    @classmethod
-    def parse(cls, spec: str, mode: str = "raise") -> "FaultPlan":
-        """Parse the plan grammar (module docstring)."""
-        spec = spec.strip()
-        if "+" in spec:
-            name, _, nb = spec.rpartition("+")
-            return cls(point=name, after_bytes=int(nb), mode=mode)
-        if "@" in spec:
-            name, _, n = spec.rpartition("@")
-            return cls(point=name, hits=int(n), mode=mode)
-        return cls(point=spec, mode=mode)
-
-
-_PLAN: Optional[FaultPlan] = None
-
-
-def install(spec: Optional[str] = None, mode: Optional[str] = None):
-    """Install a fault plan. With no args, reads ``REPRO_FAULT`` /
-    ``REPRO_FAULT_MODE`` from the environment (the subprocess tests'
-    channel); no-op if neither is given."""
-    global _PLAN
-    if spec is None:
-        spec = os.environ.get("REPRO_FAULT")
-    if mode is None:
-        mode = os.environ.get("REPRO_FAULT_MODE", "raise")
-    if not spec:
-        return None
-    _PLAN = FaultPlan.parse(spec, mode=mode)
-    return _PLAN
-
-
-def uninstall():
-    global _PLAN
-    _PLAN = None
-
-
-def active() -> Optional[FaultPlan]:
-    return _PLAN
-
-
-def _die(plan: FaultPlan):
-    if plan.mode == "exit":
-        os._exit(42)                 # a real crash: no cleanup of any kind
-    raise InjectedCrash(plan.point)
-
-
-def crash_point(name: str):
-    """Named protocol step: dies when the installed plan targets `name`
-    (point-style, not byte-budget) and this is the plan's Nth hit."""
-    plan = _PLAN
-    if plan is None or plan.after_bytes >= 0 or plan.point != name:
-        return
-    plan._hit_count += 1
-    if plan._hit_count >= plan.hits:
-        _die(plan)
-
-
-def write(f, data: bytes, stream: str):
-    """Byte-counted write through the injection seam. When the installed
-    plan targets `stream` with a byte budget, writes exactly the budget's
-    remaining bytes, forces them to disk (flush + fsync — the on-disk
-    state must be the crash state, not "whatever the FILE* buffer held"),
-    and dies."""
-    plan = _PLAN
-    if plan is None or plan.after_bytes < 0 or plan.point != stream:
-        f.write(data)
-        return
-    remaining = plan.after_bytes - plan._written
-    if len(data) < remaining or remaining < 0:
-        f.write(data)
-        plan._written += len(data)
-        return
-    f.write(data[:max(remaining, 0)])
-    f.flush()
-    os.fsync(f.fileno())
-    _die(plan)
-
-
-# ------------------------------------------------------------ corruption
-def flip_byte(path: str, offset: int):
-    """XOR one byte at `offset` (negative: from EOF) — the bit-rot
-    injector for the load-path CRC tests."""
-    with open(path, "r+b") as f:
-        size = os.fstat(f.fileno()).st_size
-        off = offset if offset >= 0 else size + offset
-        f.seek(off)
-        b = f.read(1)
-        f.seek(off)
-        f.write(bytes([b[0] ^ 0xFF]))
-
-
-def truncate_tail(path: str, nbytes: int):
-    """Drop the last `nbytes` bytes — the torn-write injector."""
-    size = os.path.getsize(path)
-    with open(path, "r+b") as f:
-        f.truncate(max(0, size - nbytes))
+__all__ = ["FaultPlan", "InjectedCrash", "InjectedFault",
+           "InjectedTransientFault", "active", "crash_point", "flip_byte",
+           "inject", "install", "serve_point", "truncate_tail",
+           "uninstall", "write"]

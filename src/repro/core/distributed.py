@@ -274,10 +274,10 @@ def _local_router(C, srt, t_route):
 
 
 def _shard_map_variants(local_search, mesh, spec, axes, with_filter,
-                        with_router):
+                        with_router, with_health=False):
     """shard_map wiring shared by both distributed search makers: the
-    optional filter bitmap and router-table args extend in_specs in a
-    fixed order (ivf, Q[, filt][, router])."""
+    optional filter bitmap, router-table, and health-mask args extend
+    in_specs in a fixed order (ivf, Q[, filt][, router][, health])."""
     from jax.experimental.shard_map import shard_map
 
     a = axes if len(axes) > 1 else axes[0]
@@ -286,14 +286,36 @@ def _shard_map_variants(local_search, mesh, spec, axes, with_filter,
         specs.append(P(a))
     if with_router:
         specs.append(tree_router_pspecs(axes))
-    fn = {
-        (False, False): lambda ivf, Q: local_search(ivf, Q),
-        (True, False): lambda ivf, Q, f: local_search(ivf, Q, f),
-        (False, True): lambda ivf, Q, r: local_search(ivf, Q, None, r),
-        (True, True): local_search,
-    }[(with_filter, with_router)]
+    if with_health:
+        specs.append(P(a))
+
+    def fn(ivf, Q, *rest):
+        it = iter(rest)
+        filt = next(it) if with_filter else None
+        srt = next(it) if with_router else None
+        health = next(it) if with_health else None
+        return local_search(ivf, Q, filt, srt, health)
+
     return shard_map(fn, mesh=mesh, in_specs=tuple(specs),
                      out_specs=(P(), P()), check_rep=False)
+
+
+def _mask_unhealthy(ids, vals, health):
+    """Degraded fan-out (DESIGN.md §3.13): zero out a DOWN shard's local
+    contribution before the global merge — its candidate rows become the
+    (-1, -inf) padding sentinel, so the merged top-k comes entirely from
+    the healthy shards (partial results, never a hang and never a stale
+    answer attributed to a dead target). `health` is the (D,) uint8
+    bitmap (HealthTracker.mask), sharded like the index, so each shard
+    sees its own (1,) slice. With every bit set the select copies
+    ids/vals through unchanged — healthy-path results stay
+    bitwise-identical to the non-health trace (pinned in
+    tests/test_resilience.py)."""
+    if health is None:
+        return ids, vals
+    ok = health[0] > 0
+    return (jnp.where(ok, ids, -1).astype(jnp.int32),
+            jnp.where(ok, vals, -jnp.inf))
 
 
 def make_replicated_search(mesh, axes: Tuple[str, ...], *, top_t: int,
@@ -324,6 +346,15 @@ def make_replicated_search(mesh, axes: Tuple[str, ...], *, top_t: int,
     with_filter=True: the fn takes a trailing (n,) uint8 GLOBAL-id bitmap
     (replicated — every replica holds all ids), e.g. a tenant bitmap from
     the front-end's TenantFilterBank.
+
+    Degraded mode (§3.13) is intentionally NOT a mask here, unlike the
+    shard-parallel makers: replicas hold disjoint QUERY slices of one
+    batch, so masking a dead replica would lose its queries' answers
+    rather than narrow their coverage. The degraded path for replica
+    fan-out lives at the front-end: a failed replica dispatch trips the
+    per-target circuit breaker and the batch re-dispatches on the local
+    single-device path (same data, full coverage), flagged
+    `SearchResult.degraded`.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -360,6 +391,7 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
                             with_filter: bool = False,
                             with_router: bool = False,
                             t_route: Optional[int] = None,
+                            with_health: bool = False,
                             params=None):
     """Returns jit-able fn(ShardedIVF, Q (nq, d)) → (ids, scores) global.
 
@@ -378,12 +410,19 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
     ceil(S/8)) instead of the flat local GEMM — the per-shard O(c)→O(√c)
     probe reduction, shard-local like everything else.
 
+    with_health=True: the fn takes a FINAL (D,) uint8 health bitmap
+    (HealthTracker.mask, sharded like the index) and serves top-k from
+    the HEALTHY shards only — a down shard's candidates become (-1,
+    -inf) padding before the global merge (partial results, DESIGN.md
+    §3.13). An all-ones mask is bitwise-identical to the
+    with_health=False results.
+
     params: optional serve/api.SearchParams whose k/top_t override the
     kwargs (the unified request API, DESIGN.md §3.12).
     """
     top_t, final_k, _ = _apply_params(params, top_t, final_k)
 
-    def local_search(ivf: ShardedIVF, Q, filt=None, srt=None):
+    def local_search(ivf: ShardedIVF, Q, filt=None, srt=None, health=None):
         # leading shard dim is size 1 inside shard_map — squeeze it
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]
@@ -408,6 +447,7 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         # globalize local ids, preserving the -1 padding sentinel (an
         # under-filled window must not alias into the previous shard)
         ids = jnp.where(ids >= 0, ids + base, -1).astype(jnp.int32)
+        ids, vals = _mask_unhealthy(ids, vals, health)
         # global merge: gather every shard's candidates, re-top-k
         ax = axes[0] if len(axes) == 1 else axes
         all_ids = jax.lax.all_gather(ids, ax, tiled=False)   # (D, nq, k)
@@ -422,7 +462,7 @@ def make_distributed_search(mesh, axes: Tuple[str, ...], *, top_t: int,
         return jnp.take_along_axis(flat_i, pos, axis=1), v
 
     return _shard_map_variants(local_search, mesh, sharded_ivf_pspecs(axes),
-                               axes, with_filter, with_router)
+                               axes, with_filter, with_router, with_health)
 
 
 def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
@@ -431,6 +471,7 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
                                with_filter: bool = False,
                                with_router: bool = False,
                                t_route: Optional[int] = None,
+                               with_health: bool = False,
                                params=None):
     """PQ-scored distributed search (§Perf H3 — the paper's own pipeline).
 
@@ -446,11 +487,14 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
     uint8 local-id bitmap argument masking candidates pre-dedup.
     with_router/t_route as in make_distributed_search: a trailing
     ShardedTreeRouter argument replaces the flat local probe.
+    with_health as in make_distributed_search: a final (D,) uint8 health
+    bitmap masks down shards out of the merge (§3.13 partial results).
     params: optional serve/api.SearchParams overriding k/top_t (§3.12).
     """
     top_t, final_k, _ = _apply_params(params, top_t, final_k)
 
-    def local_search(ivf: ShardedIVFPQ, Q, filt=None, srt=None):
+    def local_search(ivf: ShardedIVFPQ, Q, filt=None, srt=None,
+                     health=None):
         C = ivf.centroids[0]
         part_ids = ivf.part_ids[0]
         part_codes = ivf.part_codes[0]
@@ -493,6 +537,7 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
         ids, vals = jax.lax.map(tile, Qc)
         ids = ids.reshape(nq, final_k)
         vals = vals.reshape(nq, final_k)
+        ids, vals = _mask_unhealthy(ids, vals, health)
         ax = axes[0] if len(axes) == 1 else axes
         all_ids = jax.lax.all_gather(ids, ax, tiled=False)
         all_vals = jax.lax.all_gather(vals, ax, tiled=False)
@@ -507,7 +552,7 @@ def make_distributed_search_pq(mesh, axes: Tuple[str, ...], *, top_t: int,
 
     return _shard_map_variants(local_search, mesh,
                                sharded_ivf_pq_pspecs(axes), axes,
-                               with_filter, with_router)
+                               with_filter, with_router, with_health)
 
 
 def sharded_from_indexes_pq(indexes) -> ShardedIVFPQ:

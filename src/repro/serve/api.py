@@ -15,7 +15,16 @@ front-end (serve/frontend.py):
 
 - `SearchResult`: ids/scores plus the serving metadata a production caller
   needs (engine time, queue wait, coalesced-batch size, escalation flag,
-  index epoch served). Unpacks like the legacy `(ids, scores)` tuple.
+  index epoch served, degraded/shards_ok/retries resilience flags).
+  Unpacks like the legacy `(ids, scores)` tuple.
+
+- The serving **error taxonomy** (DESIGN.md §3.13): `ServingError` and its
+  subclasses `OverloadedError` (admission rejected / load shed),
+  `DeadlineExceededError` (budget expired while queued), and
+  `FrontendClosedError` (orderly close or fatal dispatcher failure) — all
+  carrying `queued_us`/`engine_us` so failed requests are SLO-accountable
+  too. `is_retryable` classifies any exception for the front-end's bounded
+  retry and for client backoff policy.
 
 Default sources of truth (previously drifting between the engines —
 KNNMemory.retrieve hardcoded `top_t=4` against AnnEngine's configured 8):
@@ -40,6 +49,80 @@ DEFAULT_TOP_T = 8
 DEFAULT_RERANK_BUDGET = 256
 DEFAULT_BQ = 128
 DEFAULT_DEADLINE_MS = 50.0
+# deadline_ms bounds (§3.13): a request whose budget is under the floor
+# cannot complete even on an idle engine (one padded jit dispatch costs
+# more), so it is unsatisfiable AT SUBMIT and rejected there instead of
+# being admitted, queued, and shed at dispatch; above the cap "deadline"
+# stops meaning anything — pass deadline_ms=None (best-effort, never
+# shed) instead of a number nothing will ever exceed.
+MIN_DEADLINE_MS = 0.05
+MAX_DEADLINE_MS = 600_000.0
+
+
+class ServingError(RuntimeError):
+    """Base of the serving error taxonomy (DESIGN.md §3.13).
+
+    Every subclass records whether a client retry can help (`retryable`)
+    and carries the same timing metadata a successful SearchResult would
+    (`queued_us`/`engine_us`) — a shed or expired request still tells
+    the caller how long it sat and how much engine time it consumed
+    (always 0 for requests rejected before dispatch), so SLO accounting
+    covers failures, not just successes.
+
+    The taxonomy is also the front-end's retry policy: `is_retryable`
+    drives its bounded retry + exponential backoff for engine failures
+    (DESIGN.md §3.13), and tells clients of OverloadedError to back off
+    and resubmit vs. clients of DeadlineExceededError that resubmitting
+    the same budget will fail the same way.
+    """
+    retryable = False
+
+    def __init__(self, msg: str, *, queued_us: float = 0.0,
+                 engine_us: float = 0.0):
+        super().__init__(msg)
+        self.queued_us = float(queued_us)
+        self.engine_us = float(engine_us)
+
+
+class OverloadedError(ServingError):
+    """Admission control rejected (or load shedding evicted) the request:
+    the front-end's bounded queue is full. Retryable — by the CLIENT,
+    after backoff; the front-end itself never retries shed work (that
+    would re-add the load being shed)."""
+    retryable = True
+
+
+class DeadlineExceededError(ServingError):
+    """The request's deadline expired while it was still queued: it was
+    dropped at dispatch time instead of consuming engine capacity on an
+    answer nobody is waiting for. Not retryable — the budget is spent;
+    resubmitting with the same deadline under the same load fails the
+    same way."""
+    retryable = False
+
+
+class FrontendClosedError(ServingError):
+    """The front-end is closed — either an orderly `close()` or a fatal
+    dispatcher failure (the original failure is `__cause__`). Pending
+    Futures are failed with this instead of hanging; `submit` after
+    close raises it synchronously."""
+    retryable = False
+
+
+def is_retryable(exc: BaseException) -> bool:
+    """Transient-failure classification for the front-end's bounded
+    retry (DESIGN.md §3.13). An error is retryable iff it says so: the
+    ServingError taxonomy and the fault injectors carry a `retryable`
+    attribute, and a few stdlib transport-ish types (TimeoutError,
+    ConnectionError, InterruptedError) are transient by nature.
+    Everything else — ValueError from bad inputs, engine invariant
+    failures, InjectedCrash — is fatal for the request: retrying a
+    deterministic failure just triples its latency."""
+    r = getattr(exc, "retryable", None)
+    if r is not None:
+        return bool(r)
+    return isinstance(exc, (TimeoutError, ConnectionError,
+                            InterruptedError))
 
 
 def _positive_int(name: str, v) -> int:
@@ -130,14 +213,32 @@ class SearchParams:
               else default_rerank)
         if rb is not None:
             rb = _positive_int("rerank_budget", rb)
-        if self.deadline_ms is not None:
-            dl = self.deadline_ms
+        dl = self.deadline_ms
+        if dl is not None:
             if isinstance(dl, bool) or not isinstance(
                     dl, (int, float, np.integer, np.floating)) \
                     or not np.isfinite(dl) or dl <= 0:
                 raise ValueError(
                     f"deadline_ms must be a positive finite number, "
                     f"got {dl!r}")
+            dl = float(dl)
+            # Deadline semantics (DESIGN.md §3.13): the budget runs from
+            # submit() admission to Future completion. The front-end
+            # flushes a pending batch by half the oldest deadline and
+            # SHEDS any still-queued request at dispatch once its budget
+            # is spent (DeadlineExceededError). A budget below the floor
+            # is unsatisfiable at submit (one engine dispatch already
+            # exceeds it) and is rejected HERE — admitting it would just
+            # convert a caller bug into queue churn and a guaranteed
+            # shed. deadline_ms=None means best-effort: paced by the
+            # front-end's default_deadline_ms for batching, never shed.
+            if not MIN_DEADLINE_MS <= dl <= MAX_DEADLINE_MS:
+                raise ValueError(
+                    f"deadline_ms={dl!r} is outside "
+                    f"[{MIN_DEADLINE_MS}, {MAX_DEADLINE_MS}] — budgets "
+                    f"under the floor are unsatisfiable at submit time; "
+                    f"pass deadline_ms=None for best-effort (no-shed) "
+                    f"serving instead of an unbounded number")
         if self.recency is not None and (
                 isinstance(self.recency, bool)
                 or not isinstance(self.recency, (int, np.integer))
@@ -145,7 +246,8 @@ class SearchParams:
             raise ValueError(
                 f"recency must be a non-negative integer, "
                 f"got {self.recency!r}")
-        return dataclasses.replace(self, k=k, top_t=top_t, rerank_budget=rb)
+        return dataclasses.replace(self, k=k, top_t=top_t, rerank_budget=rb,
+                                   deadline_ms=dl)
 
     # ------------------------------------------------------- batching key
     @property
@@ -182,6 +284,17 @@ class SearchResult:
     - epoch:      index mutation epoch served (MutableIVF._alive_epoch) —
                   two results at the same epoch are comparable bitwise
     - tenant:     standing filter the request was served under
+    - degraded:   served with reduced coverage (§3.13): one or more
+                  fan-out targets were down and the result is top-k over
+                  the HEALTHY remainder (or a replica dispatch fell back
+                  to the local path). False on every healthy-path result,
+                  whose ids/scores stay bitwise-identical to pre-§3.13
+                  behavior.
+    - shards_ok:  when a shard fan-out served this request, the shard
+                  indexes that contributed (all of them ⇒ not degraded);
+                  None on single-target paths.
+    - retries:    transient engine failures absorbed by the front-end's
+                  bounded retry before this result was produced.
 
     Iterates/unpacks as (ids, scores) so structured callers and legacy
     tuple callers share the engines' return value.
@@ -195,6 +308,9 @@ class SearchResult:
     epoch: int = -1
     tenant: Optional[str] = None
     deadline_ms: Optional[float] = None
+    degraded: bool = False
+    shards_ok: Optional[Tuple[int, ...]] = None
+    retries: int = 0
 
     @property
     def nq(self) -> int:

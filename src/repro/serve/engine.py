@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 # validation + defaults live on the unified request API (serve/api.py,
@@ -113,12 +114,14 @@ class AnnEngine:
         return self.index.n_alive
 
     def add(self, X) -> np.ndarray:
+        faults.serve_point("engine:add")
         return self.index.add(X)
 
     def remove(self, ids, hard: bool = True) -> int:
         """Delete points. hard=False leaves slots in place and serves the
         tombstones through the standing filter bitmap (zero data movement,
         no snapshot invalidation) — see MutableIVF.remove."""
+        faults.serve_point("engine:remove")
         return self.index.remove(ids, hard=hard)
 
     def search(self, Q, k: int = 10, top_t: Optional[int] = None,
@@ -169,6 +172,7 @@ class AnnEngine:
                                 np.empty((0, p.k), np.float32),
                                 epoch=epoch, tenant=p.tenant,
                                 deadline_ms=p.deadline_ms)
+        faults.serve_point("engine:search")
         if _filter_dev is not None:
             filt, escalate = _filter_dev, p.escalate
         else:

@@ -57,6 +57,47 @@ module adds the missing production layer:
 Durability rides the engine snapshot: `save` stores the front-end config
 and every tenant bitmap as `extra`/`extra_arrays` alongside the index, and
 `open` restores a front-end serving the same tenants.
+
+Resilience layer (ISSUE 9, DESIGN.md §3.13) — the front-end learns to say
+"no" and "partially" instead of hanging:
+
+- **Admission control / load shedding** — `max_queue` bounds the pending
+  cost (queries queued; a mutation counts `mutation_cost`, default one
+  full batch). At the bound, `overload="reject"` refuses the new request
+  with `OverloadedError`; `overload="shed-oldest"` evicts the queued
+  search with the LEAST deadline slack (the one most likely to miss
+  anyway) to admit the newcomer. Mutations are never shed (their Futures
+  represent writes) and never evict searches — a mutation flood hits
+  admission itself, so barriers can't starve the search share of the
+  queue.
+
+- **Deadline enforcement** — a request carrying an explicit `deadline_ms`
+  whose budget expires while still queued is dropped AT DISPATCH with
+  `DeadlineExceededError` (carrying its `queued_us`) instead of spending
+  engine time on an answer nobody is waiting for. `deadline_ms=None`
+  requests are best-effort: paced by `default_deadline_ms` for batching,
+  never shed.
+
+- **Failure containment** — an engine `Exception` fails ONLY the
+  offending dispatch group's Futures; the dispatcher keeps serving.
+  Failures classified retryable (`serve/api.is_retryable`) get a bounded
+  retry with exponential backoff (`max_retries`/`retry_backoff_ms`);
+  mutations are never retried (a partially-applied add must not
+  double-apply). A `BaseException` (an injected crash, interpreter
+  shutdown) is fatal: the in-flight group gets the original error, every
+  queued Future fails with `FrontendClosedError` (cause attached), and
+  subsequent `submit` raises it — callers NEVER hang on a dead
+  dispatcher. `close(drain=False)` fails pending Futures deterministically
+  instead of draining.
+
+- **Degraded replica fan-out** — replica dispatch runs behind a
+  per-target circuit breaker (serve/health.py): a failed replica batch
+  trips the breaker and falls back to the local single-device path (same
+  data, full coverage) with `SearchResult.degraded=True`; while the
+  breaker is open, traffic stays local (still flagged degraded) until the
+  half-open probe heals it. The shard-parallel degraded path (partial
+  top-k from healthy shards) lives in core/distributed.py
+  `with_health=True`.
 """
 from __future__ import annotations
 
@@ -72,10 +113,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.core.mutable import EpochLRU
-from repro.serve.api import (DEFAULT_DEADLINE_MS, SearchParams, SearchResult,
-                             _positive_int)
+from repro.serve.api import (DEFAULT_DEADLINE_MS, DeadlineExceededError,
+                             FrontendClosedError, OverloadedError,
+                             SearchParams, SearchResult, _positive_int,
+                             is_retryable)
 from repro.serve.engine import AnnEngine
+from repro.serve.health import HealthTracker
 
 
 class UnknownTenantError(KeyError):
@@ -205,10 +250,22 @@ class _Request:
     t_admit: float = 0.0                      # perf_counter at submit
     flush_at: float = field(default=float("inf"))
     payload: Optional[tuple] = None           # mutation args
+    deadline_at: Optional[float] = None       # absolute expiry (explicit
+    #                                           deadline_ms only; None =
+    #                                           best-effort, never shed)
+    cost: int = 1                             # admission units (queries)
+    retries: int = 0                          # dispatch retries so far
 
     @property
     def nq(self) -> int:
         return int(self.Q.shape[0]) if self.Q is not None else 0
+
+    @property
+    def slack(self) -> float:
+        """Deadline slack for shed-oldest ordering (None = infinite —
+        best-effort requests are shed last)."""
+        return (float("inf") if self.deadline_at is None
+                else self.deadline_at - time.perf_counter())
 
 
 class ServingFrontend:
@@ -242,10 +299,20 @@ class ServingFrontend:
                  max_delay_ms: Optional[float] = 2.0,
                  default_deadline_ms: float = DEFAULT_DEADLINE_MS,
                  policy: str = "auto",
-                 tenant_capacity: int = 32):
+                 tenant_capacity: int = 32,
+                 max_queue: Optional[int] = None,
+                 overload: str = "reject",
+                 mutation_cost: Optional[int] = None,
+                 max_retries: int = 2,
+                 retry_backoff_ms: float = 1.0,
+                 breaker_threshold: int = 3,
+                 breaker_reset_s: float = 5.0):
         if policy not in ("local", "replica", "auto"):
             raise ValueError(f"policy must be local|replica|auto, "
                              f"got {policy!r}")
+        if overload not in ("reject", "shed-oldest"):
+            raise ValueError(f"overload must be reject|shed-oldest, "
+                             f"got {overload!r}")
         self.engine = engine
         self.max_batch = _positive_int(
             "max_batch", max_batch if max_batch is not None else engine.bq)
@@ -254,11 +321,29 @@ class ServingFrontend:
         self.max_delay_ms = max_delay_ms
         self.default_deadline_ms = float(default_deadline_ms)
         self.policy = policy
+        self.max_queue = (None if max_queue is None
+                          else _positive_int("max_queue", max_queue))
+        self.overload = overload
+        self.mutation_cost = _positive_int(
+            "mutation_cost",
+            mutation_cost if mutation_cost is not None else self.max_batch)
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self.max_retries = int(max_retries)
+        if retry_backoff_ms < 0:
+            raise ValueError("retry_backoff_ms must be >= 0")
+        self.retry_backoff_ms = float(retry_backoff_ms)
+        self.health = HealthTracker(fail_threshold=breaker_threshold,
+                                    reset_after_s=breaker_reset_s)
         self.tenants = TenantFilterBank(engine.index,
                                         capacity=tenant_capacity)
         self.stats = {"dispatches": 0, "coalesced": 0, "requests": 0,
-                      "mutations": 0, "replica_dispatches": 0}
+                      "mutations": 0, "replica_dispatches": 0,
+                      "rejected": 0, "shed": 0, "expired": 0,
+                      "retries": 0, "failures": 0, "degraded": 0}
         self._q: deque = deque()
+        self._cost = 0                  # admission units currently queued
+        self._fatal: Optional[BaseException] = None
         self._cond = threading.Condition()
         self._closed = False
         self._draining = False
@@ -289,7 +374,10 @@ class ServingFrontend:
         if self.max_delay_ms is not None:
             wait_ms = min(wait_ms, self.max_delay_ms)
         req = _Request("search", fut, Q=Q, params=p, key=p.batch_key(),
-                       t_admit=now, flush_at=now + wait_ms * 1e-3)
+                       t_admit=now, flush_at=now + wait_ms * 1e-3,
+                       deadline_at=(now + p.deadline_ms * 1e-3
+                                    if p.deadline_ms is not None else None),
+                       cost=max(int(Q.shape[0]), 1))
         self._enqueue(req)
         return fut
 
@@ -317,13 +405,17 @@ class ServingFrontend:
         insert (no window where the points are live but unfindable by
         their tenant)."""
         fut: Future = Future()
-        self._enqueue(_Request("add", fut, payload=(X, tenant)))
+        self._enqueue(_Request("add", fut, payload=(X, tenant),
+                               t_admit=time.perf_counter(),
+                               cost=self.mutation_cost))
         return fut.result()
 
     def remove(self, ids, hard: bool = True) -> int:
         """Mutation barrier: tombstone points through the queue."""
         fut: Future = Future()
-        self._enqueue(_Request("remove", fut, payload=(ids, hard)))
+        self._enqueue(_Request("remove", fut, payload=(ids, hard),
+                               t_admit=time.perf_counter(),
+                               cost=self.mutation_cost))
         return fut.result()
 
     def register_tenant(self, tenant: str,
@@ -337,20 +429,40 @@ class ServingFrontend:
         with self._cond:
             self._draining = True
             self._cond.notify_all()
-            self._cond.wait_for(lambda: not self._q or self._closed)
+            self._cond.wait_for(
+                lambda: not self._q or self._closed
+                or self._fatal is not None)
             self._draining = False
 
-    def close(self) -> None:
-        """Drain the queue, then stop the dispatcher. Idempotent."""
+    def close(self, drain: bool = True) -> None:
+        """Stop the dispatcher. Idempotent, and deterministic about every
+        pending Future: `drain=True` (default) serves the queue first;
+        `drain=False` fails queued Futures with FrontendClosedError
+        immediately. If the dispatcher already died, pending Futures were
+        failed at death — close() just reaps the thread."""
         with self._cond:
-            if self._closed:
-                return
-            self._draining = True
-            self._cond.notify_all()
-            self._cond.wait_for(lambda: not self._q)
-            self._closed = True
-            self._cond.notify_all()
+            if not self._closed:
+                if drain and self._fatal is None:
+                    self._draining = True
+                    self._cond.notify_all()
+                    self._cond.wait_for(
+                        lambda: not self._q or self._fatal is not None)
+                    self._draining = False
+                self._fail_pending_locked(FrontendClosedError(
+                    "front-end is closed (closed before dispatch)"))
+                self._closed = True
+                self._cond.notify_all()
         self._thread.join(timeout=10.0)
+
+    def _fail_pending_locked(self, exc: BaseException) -> None:
+        """Lock held: fail every queued Future with `exc` and empty the
+        queue — nobody blocks on a Future the dispatcher will never
+        serve."""
+        for r in self._q:
+            if not r.future.done():
+                r.future.set_exception(exc)
+        self._q.clear()
+        self._cost = 0
 
     def __enter__(self):
         return self
@@ -362,44 +474,144 @@ class ServingFrontend:
     # ---------------------------------------------------------- dispatcher
     def _enqueue(self, req: _Request) -> None:
         with self._cond:
-            if self._closed:
-                raise RuntimeError("front-end is closed")
+            if self._closed or self._fatal is not None:
+                err = FrontendClosedError("front-end is closed")
+                err.__cause__ = self._fatal
+                raise err
+            if (self.max_queue is not None
+                    and self._cost + req.cost > self.max_queue):
+                self._admit_locked(req)   # sheds or raises OverloadedError
             self._q.append(req)
+            self._cost += req.cost
             self._cond.notify_all()
 
+    def _admit_locked(self, req: _Request) -> None:
+        """Lock held, queue over budget: make room for `req` or refuse it.
+
+        Mutations never shed (a write's Future is a promise) and never
+        evict queued searches — an over-budget mutation is rejected under
+        BOTH policies, so a mutation flood backpressures its producer
+        instead of starving the search share of the queue. Under
+        "shed-oldest", queued searches are evicted least-deadline-slack
+        first (the requests most likely to miss anyway); best-effort
+        requests (no explicit deadline → infinite slack) go last."""
+        if self.overload == "reject" or req.kind != "search":
+            self.stats["rejected"] += 1
+            raise OverloadedError(
+                f"queue full ({self._cost}/{self.max_queue} units pending)")
+        victims = sorted((r for r in self._q if r.kind == "search"),
+                         key=lambda r: (r.slack, r.t_admit))
+        now = time.perf_counter()
+        shed = set()
+        for v in victims:
+            if self._cost + req.cost <= self.max_queue:
+                break
+            shed.add(id(v))
+            self._cost -= v.cost
+            self.stats["shed"] += 1
+            if not v.future.done():
+                v.future.set_exception(OverloadedError(
+                    "shed under overload (least deadline slack)",
+                    queued_us=(now - v.t_admit) * 1e6))
+        if shed:
+            self._q = deque(r for r in self._q if id(r) not in shed)
+        if self._cost + req.cost > self.max_queue:
+            self.stats["rejected"] += 1
+            raise OverloadedError(
+                f"queue full ({self._cost}/{self.max_queue} units pending, "
+                f"nothing sheddable)")
+
     def _loop(self) -> None:
-        while True:
+        try:
+            while True:
+                with self._cond:
+                    group, timeout = self._collect()
+                    if group is None:
+                        if self._closed and not self._q:
+                            return
+                        self._cond.wait(timeout=timeout)
+                        continue
+                    if not self._q:
+                        self._cond.notify_all()   # wake flush()/close()
+                try:
+                    self._dispatch(group)
+                except Exception as e:       # contained: group-local
+                    self._contain(group, e)
+                except BaseException as e:   # fatal: crash the dispatcher
+                    for r in group:
+                        if not r.future.done():
+                            r.future.set_exception(e)
+                    raise
+                with self._cond:
+                    if not self._q:
+                        self._cond.notify_all()
+        except BaseException as e:  # noqa: BLE001 — recorded as _fatal
+            self._dispatcher_died(e)
+
+    def _dispatcher_died(self, exc: BaseException) -> None:
+        """The dispatcher thread is exiting on a fatal error. Fail every
+        queued Future (nobody should block forever on a dead loop) and
+        poison `submit` — pinned by the stranded-Future regression test."""
+        with self._cond:
+            self._fatal = exc
+            err = FrontendClosedError(
+                f"dispatcher thread died: {exc!r}")
+            err.__cause__ = exc
+            self._fail_pending_locked(err)
+            self._cond.notify_all()
+
+    def _contain(self, group, exc: Exception) -> None:
+        """An engine Exception during dispatch: fail THIS group only; the
+        dispatcher keeps serving. Retryable search failures get a bounded
+        exponential backoff and re-queue at the head (still before any
+        queued mutation — searches at one epoch commute, so head re-entry
+        preserves the barrier order). Mutations never retry: the engine
+        may have partially applied the write, and replaying it could
+        double-apply."""
+        r0 = group[0]
+        if (r0.kind == "search" and is_retryable(exc)
+                and r0.retries < self.max_retries):
+            time.sleep(self.retry_backoff_ms * (2 ** r0.retries) * 1e-3)
             with self._cond:
-                group, timeout = self._collect()
-                if group is None:
-                    if self._closed and not self._q:
-                        return
-                    self._cond.wait(timeout=timeout)
-                    continue
-                if not self._q:
-                    self._cond.notify_all()   # wake flush()/close() waiters
-            try:
-                self._dispatch(group)
-            except BaseException as e:   # noqa: BLE001 — futures carry it
+                if self._closed or self._fatal is not None:
+                    err = FrontendClosedError(
+                        "front-end closed during retry")
+                    err.__cause__ = exc
+                    for r in group:
+                        if not r.future.done():
+                            r.future.set_exception(err)
+                    return
                 for r in group:
-                    if not r.future.done():
-                        r.future.set_exception(e)
-            with self._cond:
-                if not self._q:
-                    self._cond.notify_all()
+                    r.retries += 1
+                self.stats["retries"] += 1
+                self._q.extendleft(reversed(group))
+                self._cost += sum(r.cost for r in group)
+                self._cond.notify_all()
+            return
+        self.stats["failures"] += 1
+        for r in group:
+            if not r.future.done():
+                r.future.set_exception(exc)
 
     def _collect(self):
         """With the lock held: pick the next dispatch group, or
         (None, timeout) to sleep. Mutations dispatch only from the queue
         head (strict barrier); searches group by coalescing key across the
         pre-mutation prefix (searches at one epoch commute, so grouping
-        past a different-keyed search is safe — past a mutation is not)."""
+        past a different-keyed search is safe — past a mutation is not).
+
+        Deadline enforcement happens HERE, at collection time: a queued
+        search whose explicit deadline already passed is dropped with
+        DeadlineExceededError instead of consuming engine time. Requests
+        already handed to the engine are never clawed back."""
+        self._expire_locked()
         q = self._q
         if not q:
             return None, None
         head = q[0]
         if head.kind != "search":
             q.popleft()
+            self._cost -= head.cost
             return [head], None
         pre = []                    # searches before the first mutation
         for r in q:
@@ -434,7 +646,29 @@ class ServingFrontend:
                 break
         taken = set(map(id, chosen))
         self._q = deque(r for r in q if id(r) not in taken)
+        self._cost -= sum(r.cost for r in chosen)
         return chosen, None
+
+    def _expire_locked(self) -> None:
+        """Lock held: shed queued searches whose explicit deadline has
+        already passed (their caller has given up; an answer now is pure
+        waste). Best-effort requests (deadline_at=None) never expire."""
+        now = time.perf_counter()
+        dead = [r for r in self._q
+                if r.kind == "search" and r.deadline_at is not None
+                and now >= r.deadline_at]
+        if not dead:
+            return
+        gone = set(map(id, dead))
+        self._q = deque(r for r in self._q if id(r) not in gone)
+        self._cost -= sum(r.cost for r in dead)
+        self.stats["expired"] += len(dead)
+        for r in dead:
+            qd = (now - r.t_admit) * 1e6
+            if not r.future.done():
+                r.future.set_exception(DeadlineExceededError(
+                    f"deadline_ms={r.params.deadline_ms} expired after "
+                    f"{qd / 1e3:.1f}ms queued", queued_us=qd))
 
     def _dispatch(self, group) -> None:
         req = group[0]
@@ -464,14 +698,29 @@ class ServingFrontend:
         filt_dev = (self.tenants.get(p.tenant)
                     if p.tenant is not None else None)
         t0 = time.perf_counter()
-        if self._use_replica(p):
-            ids, vals, escalated = self._replica_search(Qcat, p, filt_dev)
-            self.stats["replica_dispatches"] += 1
-        else:
+        degraded = False
+        want_replica = self._use_replica(p)
+        use_replica = want_replica and self.health.allow("replica")
+        if want_replica and not use_replica:
+            degraded = True     # breaker open: full-coverage local serve,
+            #                     but the fan-out capacity is reduced
+        ids = None
+        if use_replica:
+            try:
+                ids, vals, escalated = self._replica_search(Qcat, p,
+                                                            filt_dev)
+                self.health.success("replica")
+                self.stats["replica_dispatches"] += 1
+            except Exception:   # replica target failed: trip + fall back
+                self.health.failure("replica")
+                degraded = True
+        if ids is None:         # local path (policy, breaker, or fallback)
             r = self.engine.search_request(
                 Qcat, p, **({"_filter_dev": filt_dev}
                             if filt_dev is not None else {}))
             ids, vals, escalated = r.ids, r.scores, r.escalated
+        if degraded:
+            self.stats["degraded"] += len(group)
         engine_us = (time.perf_counter() - t0) * 1e6
         t_done = time.perf_counter()
         epoch = getattr(self.engine.index, "_alive_epoch", -1)
@@ -488,7 +737,8 @@ class ServingFrontend:
                 engine_us=engine_us,
                 queued_us=(t_done - r.t_admit) * 1e6 - engine_us,
                 batch_size=total, escalated=escalated, epoch=epoch,
-                tenant=p.tenant, deadline_ms=r.params.deadline_ms))
+                tenant=p.tenant, deadline_ms=r.params.deadline_ms,
+                degraded=degraded, retries=r.retries))
 
     # ------------------------------------------------------ replica fan-out
     def _use_replica(self, p: SearchParams) -> bool:
@@ -509,6 +759,7 @@ class ServingFrontend:
         results stay bitwise identical to local execution."""
         from repro.core.router import clamp_top_t
         from repro.core.search import pad_queries
+        faults.serve_point("replica:dispatch")
         if filt_dev is None:
             filt, escalate = self.engine.index.serving_filter(
                 escalate=p.escalate)
@@ -550,7 +801,12 @@ class ServingFrontend:
                "max_delay_ms": self.max_delay_ms,
                "default_deadline_ms": self.default_deadline_ms,
                "policy": self.policy,
-               "tenant_capacity": self.tenants._cache.capacity}
+               "tenant_capacity": self.tenants._cache.capacity,
+               "max_queue": self.max_queue,
+               "overload": self.overload,
+               "mutation_cost": self.mutation_cost,
+               "max_retries": self.max_retries,
+               "retry_backoff_ms": self.retry_backoff_ms}
         self.engine.save(path, extra={"frontend": cfg, **tmeta},
                          extra_arrays=tarrays)
 

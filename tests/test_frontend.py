@@ -213,17 +213,19 @@ def test_mutation_is_a_barrier(ds, engine):
     back-to-back before the dispatcher wakes."""
     from concurrent.futures import Future
     from repro.serve.frontend import _Request
+    # generous deadlines: queued-behind-a-barrier requests must not be
+    # shed by deadline enforcement while the mutation (re)compiles
     with ServingFrontend(engine, policy="local", max_batch=64,
-                         max_delay_ms=None) as fe:
+                         max_delay_ms=5.0) as fe:
         e0 = engine.index._alive_epoch
         pre = [fe.submit(ds.Q[i:i + 1],
-                         SearchParams(k=5, deadline_ms=100.0))
+                         SearchParams(k=5, deadline_ms=10_000.0))
                for i in range(3)]
         mfut: Future = Future()
         fe._enqueue(_Request("remove", mfut,
                              payload=(np.arange(N), False)))
         post = [fe.submit(ds.Q[i:i + 1],
-                          SearchParams(k=5, deadline_ms=100.0))
+                          SearchParams(k=5, deadline_ms=10_000.0))
                 for i in range(3)]
         pre_r = [f.result(timeout=10.0) for f in pre]
         assert mfut.result(timeout=10.0) == N
