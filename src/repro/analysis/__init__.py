@@ -1,0 +1,33 @@
+"""Static contract analyzer (DESIGN.md §3.14): jaxpr invariant contracts,
+recompile sentinel, and repo-specific AST lints, gated in CI via
+`python -m repro.analysis.check`.
+
+Import surface:
+  jaxpr_shapes / jaxpr_outvals / iter_eqns    shared jaxpr walker (the
+      single replacement for the test-side `_jaxpr_shapes` helpers)
+  jaxpr_contract / check_all_contracts        declarative contract registry
+  CacheWatch / run_serving_workload           recompile sentinel
+  lint_source / lint_paths                    AST lint pass
+  Finding / load_baseline                     findings + ratchet baseline
+"""
+from repro.analysis.findings import (Finding, load_baseline,  # noqa: F401
+                                     partition_findings, save_baseline)
+from repro.analysis.jaxpr_walk import (iter_eqns, jaxpr_outvals,  # noqa: F401
+                                       jaxpr_primitives, jaxpr_shapes)
+
+
+def __getattr__(name):
+    # contracts/sentinel/lint import jax + serving layers — load lazily so
+    # `from repro.analysis import jaxpr_shapes` stays import-cheap in tests
+    if name in ("jaxpr_contract", "check_all_contracts", "check_contract",
+                "TraceSpec", "REGISTRY", "HOST_CALLBACK_PRIMITIVES"):
+        from repro.analysis import contracts
+        return getattr(contracts, name)
+    if name in ("CacheWatch", "run_serving_workload", "snapshot_caches",
+                "cache_growth", "resolve_entry_points"):
+        from repro.analysis import sentinel
+        return getattr(sentinel, name)
+    if name in ("lint_source", "lint_paths"):
+        from repro.analysis import lint_ast
+        return getattr(lint_ast, name)
+    raise AttributeError(name)

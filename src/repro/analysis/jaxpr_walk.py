@@ -1,0 +1,79 @@
+"""Shared recursive jaxpr walker (DESIGN.md §3.14).
+
+The single source of truth for "what does this trace materialize" —
+previously three copy-pasted `_jaxpr_shapes` helpers in
+tests/test_search_pipeline.py, tests/test_filtered_search.py and (by
+import) tests/test_build_perf.py. The walker recurses into every nested
+jaxpr an equation carries: pjit/scan/while bodies (`params["jaxpr"]`),
+cond branches (`params["branches"]` — a tuple, which the old helpers
+missed), and pallas_call kernels.
+
+`jaxpr_shapes` keeps the original helper's contract (list of
+equation-output shapes, recursively) so the migrated test assertions are
+unchanged-or-stronger; `jaxpr_outvals` is the richer record the contract
+checker consumes (primitive, shape, dtype per output).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, List, NamedTuple, Set, Tuple
+
+
+class OutVal(NamedTuple):
+    """One equation output: the primitive that produced it + its aval."""
+    primitive: str
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+def _as_jaxpr(j):
+    """ClosedJaxpr → Jaxpr; Jaxpr passes through."""
+    return getattr(j, "jaxpr", j)
+
+
+def _sub_jaxprs(param: Any) -> Iterator[Any]:
+    """Nested jaxprs inside one equation param value. Params hold
+    ClosedJaxprs (pjit/scan), bare Jaxprs (pallas_call grids), and tuples
+    of either (cond branches)."""
+    if isinstance(param, (tuple, list)):
+        for p in param:
+            yield from _sub_jaxprs(p)
+    elif hasattr(param, "jaxpr"):          # ClosedJaxpr
+        yield param.jaxpr
+    elif hasattr(param, "eqns"):           # bare Jaxpr
+        yield param
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """Every equation in the (closed) jaxpr, depth-first into nested
+    sub-jaxprs."""
+    jaxpr = _as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for p in eqn.params.values():
+            for sub in _sub_jaxprs(p):
+                yield from iter_eqns(sub)
+
+
+def jaxpr_shapes(jaxpr) -> List[Tuple[int, ...]]:
+    """All equation-output shapes in a (closed) jaxpr, recursively — the
+    shared replacement for the test-side `_jaxpr_shapes` helpers."""
+    return [tuple(v.aval.shape) for eqn in iter_eqns(jaxpr)
+            for v in eqn.outvars if hasattr(v.aval, "shape")]
+
+
+def jaxpr_outvals(jaxpr) -> List[OutVal]:
+    """(primitive, shape, dtype) for every equation output, recursively."""
+    out: List[OutVal] = []
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        for v in eqn.outvars:
+            aval = v.aval
+            if hasattr(aval, "shape"):
+                dt = str(getattr(aval, "dtype", ""))
+                out.append(OutVal(name, tuple(aval.shape), dt))
+    return out
+
+
+def jaxpr_primitives(jaxpr) -> Set[str]:
+    """Set of primitive names appearing anywhere in the trace."""
+    return {eqn.primitive.name for eqn in iter_eqns(jaxpr)}

@@ -1,0 +1,209 @@
+"""Recompile sentinel: a registry of jit caches + a canonical mixed-traffic
+serving workload that must add ZERO cache entries (DESIGN.md §3.14).
+
+The repo's serving invariant since PR 5/8: trace-shape bucketing
+(`pad_queries`) and batch-key coalescing mean that once the buckets a
+deployment serves are warm, NO arrival pattern — varied nq, tenants,
+inline filters, escalation, mutation cadence — compiles anything new.
+Individual tests pin slices of this (`_cache_size()` before/after); the
+sentinel is the exhaustive version: snapshot every registered jit cache,
+drive the canonical workload through a real ServingFrontend, and report
+any growth as findings.
+
+`CacheWatch` is the reusable context-manager form the per-test pins
+migrate onto:
+
+    with CacheWatch(search_jit_batched):
+        ... arbitrary serving traffic ...
+    # raises AssertionError on exit if the cache grew
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.analysis.findings import Finding
+
+# name → "module:attr" for every jit entry point that owns a cache worth
+# watching. Resolved lazily so importing the sentinel costs nothing.
+JIT_ENTRY_POINTS: Dict[str, str] = {
+    "search_jit": "repro.core.search:search_jit",
+    "search_jit_batched": "repro.core.search:search_jit_batched",
+    "lloyd_sweep": "repro.kernels.lloyd:lloyd_sweep",
+    "lloyd_sweep_batched": "repro.kernels.lloyd:lloyd_sweep_batched",
+    "assign_fused_gemm": "repro.kernels.soar_assign:_fused_assign_gemm",
+    "tree_route_ref": "repro.kernels.tree_route:tree_route_ref",
+    "pq_encode": "repro.quant.pq:pq_encode",
+    "pq_lut": "repro.quant.pq:pq_lut",
+}
+
+
+def resolve_entry_points(names=None) -> Dict[str, Callable]:
+    import importlib
+    out: Dict[str, Callable] = {}
+    for name, ref in JIT_ENTRY_POINTS.items():
+        if names and name not in names:
+            continue
+        mod, attr = ref.split(":")
+        fn = getattr(importlib.import_module(mod), attr)
+        if hasattr(fn, "_cache_size"):
+            out[name] = fn
+    return out
+
+
+def cache_size(fn) -> int:
+    return int(fn._cache_size())
+
+
+def snapshot_caches(fns: Optional[Dict[str, Callable]] = None
+                    ) -> Dict[str, int]:
+    fns = fns if fns is not None else resolve_entry_points()
+    return {name: cache_size(fn) for name, fn in fns.items()}
+
+
+def cache_growth(before: Dict[str, int],
+                 after: Dict[str, int]) -> Dict[str, tuple]:
+    return {name: (before[name], after[name])
+            for name in before if after.get(name, 0) > before[name]}
+
+
+class CacheWatch:
+    """Assert zero jit-cache growth across a block.
+
+    `CacheWatch(fn, ...)` watches the given jit wrappers (anything with
+    `_cache_size()`); with no args it watches the full registry. On exit
+    (without a pending exception) it raises AssertionError naming every
+    grown cache — the shared replacement for the per-test
+    before/after `_cache_size()` pins."""
+
+    def __init__(self, *fns, allowed_growth: int = 0):
+        if fns:
+            self.fns = {getattr(f, "__name__", f"fn{i}"): f
+                        for i, f in enumerate(fns)}
+        else:
+            self.fns = resolve_entry_points()
+        self.allowed_growth = allowed_growth
+        self.before: Dict[str, int] = {}
+
+    def __enter__(self) -> "CacheWatch":
+        self.before = snapshot_caches(self.fns)
+        return self
+
+    def growth(self) -> Dict[str, tuple]:
+        return cache_growth(self.before, snapshot_caches(self.fns))
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            return False
+        grown = {name: (b, a) for name, (b, a) in self.growth().items()
+                 if a - b > self.allowed_growth}
+        if grown:
+            raise AssertionError(
+                "jit cache grew during watched block: " + ", ".join(
+                    f"{name} {b}->{a}" for name, (b, a) in grown.items()))
+        return False
+
+
+# --------------------------------------------------- canonical workload
+
+def run_serving_workload(verbose: bool = False) -> List[Finding]:
+    """Drive the canonical mixed-traffic serving workload and return a
+    cache-growth finding per jit entry point that recompiled.
+
+    Phases:
+      1. build a small engine + front-end, register two tenants;
+      2. warm every trace class a deployment serves — both power-of-two
+         buckets, the pure-unfiltered trace, tenant/standing/inline
+         filtered traces with escalation on AND off, and the mutation
+         cadence (an overflow-sized add forces one capacity growth so
+         later small adds stay inside the grown headroom, exactly the
+         delta-pack contract of DESIGN.md §3.8);
+      3. snapshot every registered jit cache;
+      4. the measured phase: concurrent clients with varied nq, rotating
+         tenants, inline bitmaps, escalation toggles, and interleaved
+         add/soft-remove barriers;
+      5. any cache growth is a finding.
+    """
+    import threading
+
+    import jax
+    import numpy as np
+
+    from repro.serve.api import SearchParams
+    from repro.serve.engine import AnnEngine
+    from repro.serve.frontend import ServingFrontend
+
+    rng = np.random.default_rng(0)
+    n, d = 2_000, 16
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    Q = rng.standard_normal((32, d)).astype(np.float32)
+    engine = AnnEngine.build(jax.random.PRNGKey(1), X, 16,
+                             spill_mode="soar", train_iters=4)
+
+    findings: List[Finding] = []
+    with ServingFrontend(engine, policy="local", max_batch=16,
+                         default_deadline_ms=10_000.0) as fe:
+        fe.register_tenant("t0", ids=np.arange(0, n, 2))
+        fe.register_tenant("t1", ids=np.arange(1, n, 2))
+
+        # -- warmup: every trace class the measured phase will touch
+        for nq in (1, 9):                       # buckets 8 and 16
+            fe.search(Q[:nq], SearchParams(k=5))        # pure unfiltered
+        # mutation cadence: force the one legitimate capacity growth now
+        ids = fe.add(rng.standard_normal((400, d)).astype(np.float32))
+        fe.remove(ids[:8], hard=False)          # standing tombstone filter
+        # the incremental-assign path right-sizes its chunk to the add
+        # batch (§3.8), so each distinct mutation batch size traces once:
+        # warm the cadence size the measured phase uses
+        fe.add(rng.standard_normal((2, d)).astype(np.float32))
+        for nq in (1, 9):
+            fe.search(Q[:nq], SearchParams(k=5))        # standing-filter
+            for tenant in ("t0", "t1"):
+                fe.search(Q[:nq], SearchParams(k=5, tenant=tenant))
+                fe.search(Q[:nq], SearchParams(k=5, tenant=tenant,
+                                               escalate=False))
+        mask = (rng.random(engine.index.n_total) < 0.5).astype(np.uint8)
+        fe.search(Q[:3], SearchParams(k=5, filter_mask=mask))   # inline
+        fe.search(Q[:3], SearchParams(k=5, filter_mask=mask,
+                                      escalate=False))
+        fe.flush()
+
+        # -- snapshot, then the measured mixed-traffic phase
+        fns = resolve_entry_points()
+        before = snapshot_caches(fns)
+        tenants = (None, "t0", "t1", None, "t1", "t0")
+
+        def client(i: int) -> None:
+            nq = 1 + (i % 13)                   # both buckets, all sizes
+            p = SearchParams(k=5, tenant=tenants[i % len(tenants)],
+                             escalate=(i % 3 != 0))
+            fe.search(Q[i % 16:i % 16 + nq], p)
+
+        for wave in range(3):
+            threads = [threading.Thread(target=client, args=(wave * 12 + j,))
+                       for j in range(12)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            # mutation barriers between waves: small adds stay inside the
+            # grown capacity headroom; soft removes never move data
+            new = fe.add(rng.standard_normal((2, d)).astype(np.float32))
+            fe.remove(new[:1], hard=False)
+        m2 = (rng.random(engine.index.n_total) < 0.4).astype(np.uint8)
+        fe.search(Q[:5], SearchParams(k=5, filter_mask=m2))
+        fe.flush()
+        after = snapshot_caches(fns)
+        stats = dict(fe.stats)
+
+    for name, (b, a) in cache_growth(before, after).items():
+        findings.append(Finding(
+            "cache-growth", "sentinel:serving-workload", context=name,
+            snippet=f"{name}", line=0,
+            message=(f"canonical serving workload grew {name}'s jit cache "
+                     f"{b}->{a} — a trace class escaped the warmup "
+                     f"buckets (recompile storm risk in serving)")))
+    if verbose:
+        print(f"[sentinel] requests={stats.get('requests')} "
+              f"dispatches={stats.get('dispatches')} "
+              f"coalesced={stats.get('coalesced')} caches={after}")
+    return findings

@@ -20,7 +20,6 @@ mesh (dry-run cell `ann_serve`, launch/ann_dryrun.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -33,7 +32,6 @@ from repro.core.router import FlatRouter, TreeRouter
 from repro.core.search import (_pad_topk, _search_block, dedup_topk_window,
                                pack_ivf, window_pq_scores)
 from repro.kernels.soar_assign import assign_fused
-from repro.quant.pq import PQCodebook
 
 
 class ShardedIVF(NamedTuple):
@@ -234,7 +232,8 @@ def stack_filters(masks, n_local_max: Optional[int] = None) -> jax.Array:
     filtered distributed search paths (sharded like the index arrays).
     """
     masks = [np.asarray(m).astype(np.uint8).ravel() for m in masks]
-    nmax = int(n_local_max or max(m.shape[0] for m in masks))
+    nmax = int(max(m.shape[0] for m in masks)
+               if n_local_max is None else n_local_max)
     out = np.zeros((len(masks), nmax), np.uint8)
     for i, m in enumerate(masks):
         out[i, :m.shape[0]] = m
@@ -269,7 +268,8 @@ def _local_router(C, srt, t_route):
     S = srt.super_centroids.shape[1]
     return TreeRouter(srt.super_centroids[0], srt.children[0],
                       srt.child_centroids[0],
-                      t_route=t_route or max(1, -(-S // 8)),
+                      t_route=(max(1, -(-S // 8)) if t_route is None
+                               else t_route),
                       n_partitions=C.shape[0])
 
 

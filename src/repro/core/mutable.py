@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.ckpt.wal import REC_ADD, REC_COMPACT, REC_HARDEN, REC_REMOVE
 from repro.core.build import build_ivf_sharded, spill_plan
-from repro.core.ivf import IVFIndex, finalize_ivf
+from repro.core.ivf import IVFIndex
 from repro.core.search import PackedIVF, _paired_codes
 from repro.kernels.soar_assign import assign_fused
 from repro.quant.pq import PQCodebook, pq_encode

@@ -15,11 +15,9 @@ Token stream modes:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
 

@@ -2,7 +2,7 @@
 (arch × shape) cell — weak-type-correct, shardable, zero allocation."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

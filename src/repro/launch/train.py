@@ -17,7 +17,6 @@ from __future__ import annotations
 import argparse
 import os
 
-import jax
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_IDS, get_config, get_rule_overrides
@@ -43,13 +42,13 @@ def main():
 
     if args.mesh == "cpu":
         cfg = get_config(args.arch).smoke_config()
-        seq = args.seq or 64
-        batch = args.batch or 8
+        seq = 64 if args.seq is None else args.seq
+        batch = 8 if args.batch is None else args.batch
         ctx = None
     else:
         cfg = get_config(args.arch)
-        seq = args.seq or 4096
-        batch = args.batch or 256
+        seq = 4096 if args.seq is None else args.seq
+        batch = 256 if args.batch is None else args.batch
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
         rules = build_rules(get_rule_overrides(args.arch),
                             multi_pod=(args.mesh == "multi"),

@@ -9,7 +9,7 @@ pattern-position are stacked over the group axis and the stack is scanned
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -23,7 +23,7 @@ class ModelConfig:
     n_kv_heads: int
     d_ff: int
     vocab_size: int
-    head_dim: int = 0                # 0 → d_model // n_heads
+    head_dim: Optional[int] = None   # None → d_model // n_heads
     # block structure (one group): entries "attn" | "mamba" | "mlstm" | "slstm"
     block_pattern: Tuple[str, ...] = ("attn",)
     # which pattern positions carry an MoE MLP instead of dense (by index)
@@ -56,7 +56,11 @@ class ModelConfig:
 
     @property
     def hd(self) -> int:
-        return self.head_dim or self.d_model // self.n_heads
+        # `is None` sentinel, NOT `or`: an explicit head_dim=0 is a config
+        # error that must surface, never silently coalesce to the default
+        if self.head_dim is None:
+            return self.d_model // self.n_heads
+        return self.head_dim
 
     @property
     def cache_dtype(self) -> str:

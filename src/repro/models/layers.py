@@ -7,7 +7,6 @@ and on the 512-chip production mesh.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ lowers as fast as a 2-layer one (see DESIGN.md §6).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -525,7 +525,7 @@ class ServingFrontend:
         try:
             while True:
                 with self._cond:
-                    group, timeout = self._collect()
+                    group, timeout = self._collect_locked()
                     if group is None:
                         if self._closed and not self._q:
                             return
@@ -593,7 +593,7 @@ class ServingFrontend:
             if not r.future.done():
                 r.future.set_exception(exc)
 
-    def _collect(self):
+    def _collect_locked(self):
         """With the lock held: pick the next dispatch group, or
         (None, timeout) to sleep. Mutations dispatch only from the queue
         head (strict barrier); searches group by coalescing key across the

@@ -80,7 +80,7 @@ class KNNMemory:
         trains a two-level centroid router at build; every retrieve on
         both engines then probes through it (the snapshots carry it)."""
         n = keys.shape[0]
-        c = n_partitions or max(4, n // 256)
+        c = max(4, n // 256) if n_partitions is None else int(n_partitions)
         idx = build_ivf(jax.random.PRNGKey(seed), keys, c,
                         spill_mode=spill_mode, lam=lam, train_iters=6,
                         router=router, router_kw=router_kw)

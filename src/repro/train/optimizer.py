@@ -5,7 +5,6 @@ Optimizer state mirrors the param pytree → it inherits the params' sharding
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

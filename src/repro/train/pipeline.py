@@ -16,7 +16,6 @@ model in tests/test_pipeline.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@
 """
 from __future__ import annotations
 
-import functools
 import signal
 import time
 from typing import Callable, Optional

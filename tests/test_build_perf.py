@@ -116,7 +116,7 @@ def test_no_lloyd_iteration_n_sized_intermediates():
     """ISSUE 4 acceptance: a Lloyd iteration materializes nothing
     (n, c)-shaped and no second-pass (n,) vector — every per-point
     intermediate lives inside a chunk tile."""
-    from tests.test_search_pipeline import _jaxpr_shapes
+    from repro.analysis import jaxpr_shapes as _jaxpr_shapes
     n, d, c, chunk = 40_000, 32, 64, 4096
     X = jnp.zeros((n, d))
     C = jnp.zeros((c, d))

@@ -228,17 +228,8 @@ def test_filtered_spill_still_dedups(spilled):
 
 # ------------------------------------------------ candidate-locality (§3.9)
 
-def _jaxpr_shapes(jaxpr):
-    out = []
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            if hasattr(v.aval, "shape"):
-                out.append(tuple(v.aval.shape))
-        for p in eqn.params.values():
-            inner = getattr(p, "jaxpr", None)
-            if inner is not None:
-                out.extend(_jaxpr_shapes(inner))
-    return out
+# shared recursive walker (repro/analysis/jaxpr_walk.py, DESIGN.md §3.14)
+from repro.analysis import jaxpr_shapes as _jaxpr_shapes  # noqa: E402
 
 
 def test_no_database_sized_intermediates_filtered(spilled):
@@ -331,11 +322,11 @@ def test_engine_small_batches_share_one_compile(spilled):
     every distinct small query-batch size; bucketed padding must serve all
     of nq ∈ [1, 8] from one executable."""
     ds, idx, _ = spilled
+    from repro.analysis import CacheWatch
     eng = AnnEngine(MutableIVF.from_index(idx))
     eng.search(ds.Q[:3], k=5)                    # warm the bucket
-    before = search_jit_batched._cache_size()
-    outs = {nq: eng.search(ds.Q[:nq], k=5)[0] for nq in range(1, 9)}
-    assert search_jit_batched._cache_size() == before
+    with CacheWatch(search_jit_batched):         # shared sentinel (§3.14)
+        outs = {nq: eng.search(ds.Q[:nq], k=5)[0] for nq in range(1, 9)}
     full, _ = eng.search(ds.Q, k=5)
     for nq, ids in outs.items():
         assert ids.shape == (nq, 5)

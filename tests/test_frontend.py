@@ -98,19 +98,19 @@ def test_no_recompilation_from_coalescing(ds, engine):
     """Coalesced dispatch reuses the solo path's padding buckets: after
     warming the buckets solo traffic uses, arbitrary concurrent batch
     sizes through the front-end add no jit cache entries."""
+    from repro.analysis import CacheWatch
     for nq in (1, 9, 17):            # warm buckets 8, 16, 32
         engine.search(ds.Q[:nq], k=6)
-    before = search_jit_batched._cache_size()
-    with ServingFrontend(engine, policy="local", max_batch=32,
-                         default_deadline_ms=100.0) as fe:
-        futs = []
-        for i in range(24):          # mixed sizes, concurrent arrival
-            nq = 1 + (i % 3)
-            futs.append(fe.submit(ds.Q[i % NQ:i % NQ + nq],
-                                  SearchParams(k=6)))
-        for f in futs:
-            f.result()
-    assert search_jit_batched._cache_size() == before
+    with CacheWatch(search_jit_batched):         # shared sentinel (§3.14)
+        with ServingFrontend(engine, policy="local", max_batch=32,
+                             default_deadline_ms=100.0) as fe:
+            futs = []
+            for i in range(24):      # mixed sizes, concurrent arrival
+                nq = 1 + (i % 3)
+                futs.append(fe.submit(ds.Q[i % NQ:i % NQ + nq],
+                                      SearchParams(k=6)))
+            for f in futs:
+                f.result()
 
 
 # --------------------------------------------------------- deadline flushes

@@ -92,18 +92,11 @@ def test_dedup_topk_window_keeps_max_per_id():
     assert out_scores.tolist() == [[5.0, 4.0, 0.5]]
 
 
-def _jaxpr_shapes(jaxpr):
-    """All equation-output shapes in a (closed) jaxpr, recursively."""
-    out = []
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            if hasattr(v.aval, "shape"):
-                out.append(tuple(v.aval.shape))
-        for p in eqn.params.values():
-            inner = getattr(p, "jaxpr", None)
-            if inner is not None:
-                out.extend(_jaxpr_shapes(inner))
-    return out
+# the recursive walker lives on the shared static-analysis layer now
+# (repro/analysis/jaxpr_walk.py, DESIGN.md §3.14) — the assertion below is
+# unchanged, and the same invariant is also contract-checked repo-wide by
+# `python -m repro.analysis.check`
+from repro.analysis import jaxpr_shapes as _jaxpr_shapes  # noqa: E402
 
 
 def test_no_database_sized_intermediates(spilled):
